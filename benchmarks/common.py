@@ -1,0 +1,175 @@
+"""Shared benchmark utilities: reduced-scale experiment runner + CSV output.
+
+The paper's quality numbers are GPT-judge scores on AlpaGasus/Dolly with
+OLMoE-1.3B/6.9B on 2×A100 — not reproducible in an offline CPU container.
+Each table benchmark therefore runs the *same experimental design* (methods,
+budgets, Dirichlet α, client counts, sampling rates) at reduced scale
+(`olmoe-bench`: 2 layers, d_model 128, 8 experts) on the synthetic
+cluster-mixture corpus, and reports the monotone proxy
+``score = 100·exp(−test_loss)`` so the tables read like the paper's
+(higher = better).  Directional claims are what we validate.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import FederatedConfig, ModelConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.data.synthetic import DataConfig
+from repro.federated.simulation import build_experiment, run_experiment
+
+# reduced-scale evaluation defaults (CPU-tractable).  lr is LoRA-scale
+# appropriate for the 2-layer bench model (the paper's 1.5e-4 applies to
+# its real 6.9B model; at 1.5e-4×2 rounds the bench moves <0.001 nats and
+# no method separates — measured 2026-07-11)
+BENCH_TC = TrainConfig(batch_size=8, local_epochs=3, learning_rate=1e-2)
+
+
+def bench_model(moe: bool = True) -> ModelConfig:
+    if moe:
+        from repro.configs.olmoe_1_3b_6_9b import BENCH
+        return BENCH
+    return get_config("olmo-1.3b", "smoke")
+
+
+def bench_data(cfg: ModelConfig, n_examples: int = 192,
+               seed: int = 0) -> DataConfig:
+    return DataConfig(vocab_size=cfg.vocab_size, n_examples=n_examples,
+                      seq_len=64, n_clusters=8, seed=seed,
+                      num_codebooks=cfg.num_codebooks)
+
+
+# FLAME budget grid on the bench model (top_k=4): k_i per β, mirroring the
+# paper's {8,4,2,1} on OLMoE's top_k=8.
+BENCH_FLAME_K = {"b1": 4, "b2": 2, "b3": 1, "b4": 1}
+
+
+# --------------------------------------------------------------------------
+# pretrained frozen base (the paper fine-tunes PRETRAINED LLMs — on a
+# random-init base, rank compression loses nothing and no method separates;
+# measured 2026-07-11: all methods within 1% of each other without this)
+# --------------------------------------------------------------------------
+
+_PRETRAIN_CACHE: Dict = {}
+
+
+def pretrained_base(cfg: ModelConfig, data: DataConfig, *,
+                    steps: int = 40, lr: float = 3e-3, batch: int = 32):
+    """Briefly pretrain the FULL model so the federated phase starts from a
+    competent frozen base — but only on HALF the task clusters (the paper's
+    regime: a pretrained LLM fine-tuned on new instruction tasks).  The
+    federated corpus mixes seen and unseen clusters, so LoRA has genuine
+    headroom and the heterogeneity structure matters."""
+    key = (cfg.name, data.seed)
+    if key in _PRETRAIN_CACHE:
+        return _PRETRAIN_CACHE[key]
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import Corpus, make_corpus, split_corpus
+    from repro.models import model as model_lib
+    from repro.optim import adam
+
+    params = model_lib.init_params(jax.random.PRNGKey(data.seed + 77), cfg)
+    big = make_corpus(_dc.replace(data, n_examples=max(768,
+                                                       data.n_examples)))
+    keep = big.clusters < max(data.n_clusters // 2, 1)
+    train = Corpus(big.tokens[keep], big.labels[keep], big.mask[keep],
+                   big.clusters[keep])
+    opt = adam.init(params)
+    top_k = cfg.moe.top_k or 0
+    # cycle k during pretraining: the real OLMoE's 64-expert redundancy
+    # makes reduced-k inference viable out of the box; an 8-expert bench
+    # model needs explicit activation-robust pretraining to play the same
+    # role (otherwise serving at k=1 cripples the BASE, not the method)
+    k_cycle = sorted({max(top_k // 4, 1), max(top_k // 2, 1), top_k}) \
+        if top_k else [None]
+
+    import functools
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1),
+                       static_argnames=("k",))
+    def step(params, opt, tokens, labels, mask, k):
+        def loss_fn(p):
+            loss, _ = model_lib.lm_loss(cfg, p, tokens, labels, mask, k=k)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam.update(grads, opt, params, lr=lr, grad_clip=1.0)
+        return params, opt, loss
+
+    rng = np.random.default_rng(data.seed)
+    n = len(train.tokens)
+    loss = float("nan")
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, opt, loss = step(params, opt,
+                                 jnp.asarray(train.tokens[idx]),
+                                 jnp.asarray(train.labels[idx]),
+                                 jnp.asarray(train.mask[idx]),
+                                 k_cycle[i % len(k_cycle)])
+    _PRETRAIN_CACHE[key] = params
+    print(f"# pretrained base {cfg.name}: {steps} steps, "
+          f"final loss {float(loss):.4f}")
+    return params
+
+
+def run_setting(method: str, *, budget: Optional[str] = None,
+                alpha: float = 5.0, clients: int = 4, rounds: int = 2,
+                participation: float = 1.0, temperature: int = 2,
+                rescaler: str = "learnable", moe: bool = True,
+                n_examples: int = 192, seed: int = 0,
+                eval_k: Optional[int] = None) -> Dict[str, float]:
+    cfg = bench_model(moe)
+    fed = FederatedConfig(
+        num_clients=clients, rounds=rounds, participation=participation,
+        dirichlet_alpha=alpha, temperature=temperature, method=method,
+        rescaler=rescaler if (moe and method == "flame") else "none",
+        seed=seed)
+    dc = bench_data(cfg, n_examples, seed)
+    exp = build_experiment(cfg, fed=fed, tc=BENCH_TC, data=dc,
+                           budget=budget,
+                           base_params=pretrained_base(cfg, dc))
+    if eval_k is None and method == "flame" and budget and moe:
+        # FLAME's deployment-efficiency semantics (paper Table 2: the β
+        # row's FLOPs column is the REDUCED-k inference cost): a model
+        # fine-tuned at k_i is served at k_i
+        eval_k = exp.server.clients[0].k
+    t0 = time.time()
+    out = run_experiment(exp, eval_k=eval_k)
+    out["wall_s"] = time.time() - t0
+    out["exp"] = exp
+    return out
+
+
+def emit(name: str, rows: List[Dict], keys: List[str]) -> None:
+    """CSV block: header + rows, prefixed with the benchmark name."""
+    print(f"\n# {name}")
+    print(",".join(["bench"] + keys))
+    for r in rows:
+        print(",".join([name] + [_fmt(r.get(k)) for k in keys]))
+    sys.stdout.flush()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def timeit(fn, *args, repeats: int = 3, **kw) -> float:
+    fn(*args, **kw)                       # compile/warm
+    t0 = time.time()
+    for _ in range(repeats):
+        r = fn(*args, **kw)
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+    return (time.time() - t0) / repeats * 1e6   # us/call

@@ -1,0 +1,43 @@
+"""Figure 2 — expert-activation imbalance across clients.
+
+Reproduces the heatmap *statistics*: per-(client, expert) activation
+frequencies after one round, under both heterogeneity levels.  The paper's
+claim: activation is highly imbalanced, and lower α (more skew) increases
+the cross-client variance — the phenomenon motivating Eq. 6."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.aggregation import stack_client_frequencies
+
+from .common import emit, run_setting
+
+
+def run() -> None:
+    rows = []
+    cvars = {}
+    for alpha in (5.0, 0.5):
+        r = run_setting("flame", alpha=alpha, clients=4, rounds=1)
+        freqs = r["exp"].server.history[0].client_freqs
+        stacked = stack_client_frequencies(freqs)       # {pos: (n, P, E)}
+        f = np.concatenate([np.asarray(v).reshape(len(freqs), -1)
+                            for v in stacked.values()], axis=1)  # (n, L·E)
+        cvars[alpha] = float(np.var(f, axis=0).mean())
+        rows.append({
+            "alpha": alpha,
+            "mean_freq": float(f.mean()),
+            "min_freq": float(f.min()),
+            "max_freq": float(f.max()),
+            "cross_client_var": cvars[alpha],
+            "frac_cold_experts": float((f < 0.01).mean()),
+        })
+    emit("fig2_activation", rows,
+         ["alpha", "mean_freq", "min_freq", "max_freq",
+          "cross_client_var", "frac_cold_experts"])
+    print(f"# higher heterogeneity (alpha 0.5) raises cross-client "
+          f"activation variance: {cvars[5.0]:.5f} -> {cvars[0.5]:.5f} "
+          f"({'CONFIRMS' if cvars[0.5] > cvars[5.0] else 'REFUTES'} Fig. 2)")
+
+
+if __name__ == "__main__":
+    run()

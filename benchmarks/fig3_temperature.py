@@ -1,0 +1,28 @@
+"""Figure 3/4 — temperature sweep of the activation-aware aggregation.
+
+t = 0 is plain FedAvg; the paper finds t ∈ [2, 4] best, with the gain
+largest at constrained budgets under high heterogeneity."""
+from __future__ import annotations
+
+from .common import emit, run_setting
+
+
+def run(temps=(0, 1, 2, 4, 8), rounds=3) -> None:
+    rows = []
+    for t in temps:
+        r = run_setting("flame", budget="b4", alpha=0.5, clients=4,
+                        rounds=rounds, temperature=t)
+        rows.append({"temperature": t, "score": r["score"],
+                     "test_loss": r["test_loss"], "wall_s": r["wall_s"]})
+    emit("fig3_temperature", rows,
+         ["temperature", "score", "test_loss", "wall_s"])
+    s = {r["temperature"]: r["score"] for r in rows}
+    best_t = max(s, key=s.get)
+    print(f"# best temperature: t={best_t} (score {s[best_t]:.2f}); "
+          f"t>0 beats t=0: "
+          f"{'CONFIRMS' if max(v for k, v in s.items() if k > 0) >= s[0] else 'REFUTES'}"
+          f" (t=0 score {s[0]:.2f})")
+
+
+if __name__ == "__main__":
+    run()

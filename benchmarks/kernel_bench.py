@@ -1,0 +1,41 @@
+"""Micro-benchmarks of the kernel layer (CPU timings of the jnp oracles and
+interpret-mode kernels — TPU numbers come from the §Roofline dry-run, not
+wall clock; these timings track relative regressions only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    rows.append({"kernel": "flash_attention_ref",
+                 "us_per_call": timeit(lambda: jax.block_until_ready(
+                     ref.flash_attention_ref(q, k, v)))})
+
+    x = jax.random.normal(key, (512, 512))
+    w = jax.random.normal(key, (512, 512))
+    a = jax.random.normal(key, (512, 16)) * 0.1
+    b = jax.random.normal(key, (16, 512)) * 0.1
+    rows.append({"kernel": "lora_matmul_ref",
+                 "us_per_call": timeit(lambda: jax.block_until_ready(
+                     ref.lora_matmul_ref(x, w, a, b, 0.8)))})
+
+    logits = jax.random.normal(key, (8192, 64))
+    rows.append({"kernel": "topk_router_ref_k8",
+                 "us_per_call": timeit(lambda: jax.block_until_ready(
+                     ref.topk_router_ref(logits, 8)[0]))})
+    emit("kernel_bench", rows, ["kernel", "us_per_call"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1 fig3
+
+Output: CSV blocks (``name,...`` headers) + `#` summary lines asserting the
+paper's directional claims.  Roofline numbers live in EXPERIMENTS.md
+(§Roofline) — they come from the dry-run, not from CPU wall clock.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig2_activation, fig3_temperature, kernel_bench, table1_flops,
+               table2_budgets, table3_scale, table4_sampling, table5_rescaler)
+
+ALL = {
+    "table1": table1_flops.run,
+    "table2": table2_budgets.run,
+    "table3": table3_scale.run,
+    "table4": table4_sampling.run,
+    "table5": table5_rescaler.run,
+    "fig2": fig2_activation.run,
+    "fig3": fig3_temperature.run,
+    "kernels": kernel_bench.run,
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(ALL)
+    t0 = time.time()
+    for name in picks:
+        if name not in ALL:
+            raise SystemExit(f"unknown benchmark {name!r}; "
+                             f"choose from {list(ALL)}")
+        t = time.time()
+        ALL[name]()
+        print(f"# [{name}] done in {time.time() - t:.1f}s", flush=True)
+    print(f"\n# all benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

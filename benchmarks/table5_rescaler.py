@@ -1,0 +1,24 @@
+"""Table 5/7 — rescaler ablation: learnable s_i vs static k/k_i vs none.
+
+The paper's finding: learnable ≥ none > static in most settings, with the
+gap largest at constrained budgets."""
+from __future__ import annotations
+
+from .common import emit, run_setting
+
+
+def run(rounds=3) -> None:
+    rows = []
+    for budget in ("b3", "b4"):
+        for mode in ("learnable", "static", "none"):
+            r = run_setting("flame", budget=budget, alpha=0.5, clients=4,
+                            rounds=rounds, rescaler=mode)
+            rows.append({"budget": budget, "rescaler": mode,
+                         "score": r["score"], "test_loss": r["test_loss"],
+                         "wall_s": r["wall_s"]})
+    emit("table5_rescaler", rows,
+         ["budget", "rescaler", "score", "test_loss", "wall_s"])
+
+
+if __name__ == "__main__":
+    run()

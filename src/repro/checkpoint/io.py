@@ -1,0 +1,104 @@
+"""Pytree checkpointing: flattened path->array .npz files (no orbax here).
+
+Handles nested dicts/lists/tuples of jnp/np arrays plus scalar metadata.
+Round-resumable federated state = (global LoRA, per-client rescalers,
+round index).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+_BF16 = "__bf16__"
+
+try:
+    import ml_dtypes
+    _BF16_DTYPE = np.dtype(ml_dtypes.bfloat16)
+except ImportError:                                   # pragma: no cover
+    _BF16_DTYPE = None
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}#{i}" if prefix
+                                else f"#{i}"))
+    elif tree is None:
+        out[prefix + f"{_SEP}__none__" if prefix else "__none__"] = \
+            np.zeros((), np.int8)
+    else:
+        arr = np.asarray(tree)
+        if _BF16_DTYPE is not None and arr.dtype == _BF16_DTYPE:
+            # np.savez cannot serialise bfloat16 — store the raw uint16
+            # view and tag the key so load() restores the dtype
+            out[prefix + _BF16] = arr.view(np.uint16)
+        else:
+            out[prefix] = arr
+    return out
+
+
+def save(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(jax.tree.map(np.asarray, tree))
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def load(path: str) -> Tuple[PyTree, Optional[dict]]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    tree: dict = {}
+    for key in data.files:
+        parts = key.split(_SEP)
+        if parts[-1] == "__none__":
+            parts = parts[:-1]
+            value = None
+        elif parts[-1].endswith(_BF16):
+            value = data[key].view(_BF16_DTYPE)
+            parts[-1] = parts[-1][:-len(_BF16)]
+        else:
+            value = data[key]
+        if not parts:
+            return value, _load_meta(path)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+    tree = _restore_sequences(tree)
+    return tree, _load_meta(path)
+
+
+def _load_meta(path: str) -> Optional[dict]:
+    mp = (path if path.endswith(".npz") else path + ".npz") + ".meta.json"
+    mp = mp.replace(".npz.meta.json", ".meta.json") \
+        if not os.path.exists(mp) else mp
+    for cand in (path + ".meta.json", mp):
+        if os.path.exists(cand):
+            with open(cand) as f:
+                return json.load(f)
+    return None
+
+
+def _restore_sequences(node):
+    if isinstance(node, dict):
+        node = {k: _restore_sequences(v) for k, v in node.items()}
+        if node and all(k.startswith("#") for k in node):
+            return [node[f"#{i}"] for i in range(len(node))]
+    return node
+
+
+def to_device(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.asarray, tree)

@@ -1,0 +1,180 @@
+"""Server-side aggregation schemes.
+
+* ``fedavg``            — Eq. 3–4: dataset-size-weighted average (all leaves).
+* ``flame_aggregate``   — Eq. 6–7: activation-aware per-expert weights
+                          ``γ_i^j = (a_i^j / S_i)^t · |D_i|`` applied to the
+                          per-expert LoRA factors; non-expert adapters fall
+                          back to dataset-size weighting (their "activation
+                          frequency" is identically 1 — the paper's
+                          full-activation edge case).
+* ``hlora_aggregate``   — HLoRA: zero-padded truncated adapters averaged with
+                          per-rank-component sparsity weights.
+* ``flexlora_aggregate``— FlexLoRA: aggregate full ΔW = s·A_i·B_i, then SVD
+                          back to factors.
+
+Activation frequency: we use the token-level frequency
+``a_i^j / S_i := (#tokens client i routed to expert j) / (#tokens processed)``
+which realises every edge case the paper's §5 analysis requires: t=0 ⇒ plain
+FedAvg; never-activated expert ⇒ zero weight (randomly-initialised local
+adapters cannot contaminate the global model); activated for every token ⇒
+dataset-size weighting.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import lora as lora_lib
+
+PyTree = Any
+EPS = 1e-12
+
+
+# --------------------------------------------------------------------------
+# generic weighted tree averaging
+# --------------------------------------------------------------------------
+
+def _weighted_tree_mean(trees: Sequence[PyTree],
+                        weights: Sequence[float]) -> PyTree:
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), EPS)
+
+    def avg(*leaves):
+        acc = sum(wi * leaf.astype(jnp.float32)
+                  for wi, leaf in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def fedavg(client_trees: Sequence[PyTree],
+           dataset_sizes: Sequence[float]) -> PyTree:
+    """Standard FedAvg (Eq. 3–4)."""
+    return _weighted_tree_mean(client_trees, dataset_sizes)
+
+
+# --------------------------------------------------------------------------
+# FLAME activation-aware aggregation (Eq. 6–7)
+# --------------------------------------------------------------------------
+
+def activation_frequency(counts: Dict[str, jnp.ndarray],
+                         total_tokens: float) -> Dict[str, jnp.ndarray]:
+    """counts: {pos: (n_periods, E)} summed over the client's local steps."""
+    return {k: jnp.clip(v / jnp.maximum(total_tokens, EPS), 0.0, 1.0)
+            for k, v in counts.items()}
+
+
+def flame_aggregate(client_loras: Sequence[PyTree],
+                    client_freqs: Sequence[Dict[str, jnp.ndarray]],
+                    dataset_sizes: Sequence[float],
+                    temperature: int) -> PyTree:
+    """Aggregate client LoRA trees with Eq. 6–7.
+
+    ``client_freqs[i]``: {pos: (n_periods, E)} activation frequencies in
+    [0, 1].  Expert adapters (path containing moe/experts) receive per-expert
+    weights γ_i^j = freq^t · |D_i|; all other adapters use |D_i|.
+    """
+    n = len(client_loras)
+    sizes = jnp.asarray(dataset_sizes, jnp.float32)
+
+    # per-(client, pos) expert weights: (n, n_periods, E).  A client whose
+    # shard produced no steps reports no frequencies — zero contribution
+    # (the paper's zero-activation edge case).
+    gamma = {}
+    pos_keys = sorted({k for f in client_freqs for k in f})
+    for pos in pos_keys:
+        ref = next(f[pos] for f in client_freqs if pos in f)
+        f = jnp.stack([client_freqs[i].get(pos, jnp.zeros_like(ref))
+                       for i in range(n)])                        # (n, P, E)
+        gamma[pos] = (f ** temperature) * sizes[:, None, None]
+
+    def aggregate_blocks(pos: str, nodes: List[PyTree], in_experts: bool):
+        """Recursively average client sub-trees for one block position."""
+        node0 = nodes[0]
+        if isinstance(node0, dict):
+            return {k: aggregate_blocks(pos, [nd[k] for nd in nodes],
+                                        in_experts or k == "experts")
+                    for k in node0}
+        stacked = jnp.stack([nd.astype(jnp.float32) for nd in nodes])  # (n,...)
+        if in_experts and pos in gamma:
+            # leaf shape (n_periods, E, ...) -> weights (n, n_periods, E)
+            g = gamma[pos]
+            g = g.reshape(g.shape + (1,) * (stacked.ndim - 3))
+            denom = jnp.maximum(g.sum(0), EPS)
+            out = (stacked * g).sum(0) / denom
+        else:
+            w = sizes / jnp.maximum(sizes.sum(), EPS)
+            out = (stacked * w.reshape((n,) + (1,) * (stacked.ndim - 1))).sum(0)
+        return out.astype(node0.dtype)
+
+    blocks = {pos: aggregate_blocks(pos,
+                                    [cl["blocks"][pos] for cl in client_loras],
+                                    in_experts=False)
+              for pos in client_loras[0]["blocks"]}
+    return {"blocks": blocks}
+
+
+# --------------------------------------------------------------------------
+# HLoRA: sparsity-weighted aggregation of rank-truncated adapters
+# --------------------------------------------------------------------------
+
+def hlora_aggregate(client_loras: Sequence[PyTree],
+                    client_ranks: Sequence[int],
+                    dataset_sizes: Sequence[float],
+                    r_full: int) -> PyTree:
+    """Clients trained adapters truncated to ``client_ranks[i]``; pad to the
+    server rank and average each rank component only over the clients that
+    actually trained it."""
+    n = len(client_loras)
+    sizes = jnp.asarray(dataset_sizes, jnp.float32)
+    padded = [lora_lib.pad_rank(cl, r_full) for cl in client_loras]
+    ranks = jnp.asarray(client_ranks)
+    comp = jnp.arange(r_full)
+    trained = (ranks[:, None] > comp[None, :]).astype(jnp.float32)  # (n, r)
+    w = trained * sizes[:, None]
+    w = w / jnp.maximum(w.sum(0, keepdims=True), EPS)               # (n, r)
+
+    def avg_pair(*pairs):
+        a = jnp.stack([p["a"].astype(jnp.float32) for p in pairs])  # (n,...,d,r)
+        b = jnp.stack([p["b"].astype(jnp.float32) for p in pairs])  # (n,...,r,o)
+        wa = w.reshape((n,) + (1,) * (a.ndim - 2) + (r_full,))
+        wb = w.reshape((n,) + (1,) * (b.ndim - 3) + (r_full, 1))
+        return {"a": (a * wa).sum(0).astype(pairs[0]["a"].dtype),
+                "b": (b * wb).sum(0).astype(pairs[0]["b"].dtype)}
+
+    def rec(nodes):
+        node0 = nodes[0]
+        if isinstance(node0, dict) and set(node0) == {"a", "b"}:
+            return avg_pair(*nodes)
+        return {k: rec([nd[k] for nd in nodes]) for k in node0}
+
+    return rec(padded)
+
+
+# --------------------------------------------------------------------------
+# FlexLoRA: ΔW aggregation + SVD redistribution
+# --------------------------------------------------------------------------
+
+def flexlora_aggregate(client_loras: Sequence[PyTree],
+                       dataset_sizes: Sequence[float],
+                       r_full: int, scale: float) -> PyTree:
+    """Aggregate full-rank updates ΔW_i = scale·A_i·B_i by dataset size, then
+    SVD-refactor the averaged ΔW back into rank-``r_full`` factors."""
+    deltas = [lora_lib.merge_delta(cl, scale) for cl in client_loras]
+    avg_delta = _weighted_tree_mean(deltas, dataset_sizes)
+    return lora_lib.svd_refactor(avg_delta, r_full, scale)
+
+
+# --------------------------------------------------------------------------
+# round summary (used by benchmarks / Fig 2)
+# --------------------------------------------------------------------------
+
+def stack_client_frequencies(client_freqs: Sequence[Dict[str, jnp.ndarray]]
+                             ) -> Dict[str, jnp.ndarray]:
+    """{pos: (n_clients, n_periods, E)} — the Figure-2 heatmap tensor."""
+    out = {}
+    for pos in client_freqs[0]:
+        out[pos] = jnp.stack([f[pos] for f in client_freqs])
+    return out

@@ -1,0 +1,216 @@
+"""LoRA adapter trees (the federated trainable surface).
+
+The adapter tree mirrors the base parameter tree: every *targeted* 2-D weight
+``W`` of shape ``(..., d_in, d_out)`` (leading axes = scan periods and/or
+experts) gets a pair ``{"a": (..., d_in, r), "b": (..., r, d_out)}``.
+``a`` is Gaussian-initialised, ``b`` zero-initialised (standard LoRA), so a
+fresh adapter is an exact no-op.
+
+FLAME specifics:
+  * per-expert adapters ``A^j, B^j`` arise naturally because expert weights
+    are stacked on an expert axis — the adapter inherits it;
+  * the learnable rescaler ``s_i`` lives beside the adapters in the client's
+    trainable tree (it is client-local: its value depends on the client's
+    expert budget ``k_i`` and is NOT aggregated by the server);
+  * ``truncate_rank`` / ``pad_rank`` implement the HLoRA baseline's
+    rank-compressed distribution, ``merge_delta`` materialises ΔW = A·B for
+    the FlexLoRA baseline's SVD redistribution.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# weight names eligible for adapters, per block sub-module
+_TARGETS = {
+    "attn": ("wq", "wk", "wv", "wo"),
+    "ffn": ("w1", "w2", "w3"),
+    "moe.experts": ("w1", "w2", "w3"),
+    "moe.shared": ("w1", "w2", "w3"),
+    "ssm": ("in_proj", "out_proj"),
+}
+
+
+def _module_enabled(cfg, module: str) -> bool:
+    l = cfg.lora
+    return {
+        "attn": l.target_attn,
+        "ffn": l.target_ffn,
+        "moe.experts": l.target_expert,
+        "moe.shared": l.target_ffn,
+        "ssm": l.target_ssm,
+    }[module]
+
+
+def _init_pair(key, w: jnp.ndarray, rank: int) -> dict:
+    """Adapter for a stacked weight (..., d_in, d_out)."""
+    lead = w.shape[:-2]
+    d_in, d_out = w.shape[-2:]
+    a = (jax.random.normal(key, lead + (d_in, rank), jnp.float32)
+         * (d_in ** -0.5)).astype(w.dtype)
+    b = jnp.zeros(lead + (rank, d_out), w.dtype)
+    return {"a": a, "b": b}
+
+
+def init_lora(key, cfg, params: PyTree, rank: Optional[int] = None) -> PyTree:
+    """Build the adapter tree for ``params`` (output of model.init_params)."""
+    rank = rank if rank is not None else cfg.lora.rank
+    blocks = {}
+    for pos_name, block in params["blocks"].items():
+        kb = jax.random.fold_in(key, hash(pos_name) % (2 ** 31))
+        out: dict = {}
+        for module, names in _TARGETS.items():
+            if not _module_enabled(cfg, module):
+                continue
+            node = block
+            okay = True
+            for part in module.split("."):
+                if not isinstance(node, dict) or part not in node:
+                    okay = False
+                    break
+                node = node[part]
+            if not okay:
+                continue
+            sub = {}
+            for i, name in enumerate(names):
+                if name in node:
+                    sub[name] = _init_pair(jax.random.fold_in(kb, i),
+                                           node[name], rank)
+            if sub:
+                cur = out
+                parts = module.split(".")
+                for part in parts[:-1]:
+                    cur = cur.setdefault(part, {})
+                cur[parts[-1]] = sub
+        blocks[pos_name] = out
+    return {"blocks": blocks}
+
+
+def init_rescalers(cfg, k_client: int, mode: str = "learnable"
+                   ) -> Optional[Dict[str, jnp.ndarray]]:
+    """FLAME Eq. 5 rescaler s_i, one scalar per MoE layer.
+
+    ``mode``: "learnable" (init at k/k_i, trained), "static" (k/k_i, frozen
+    by exclusion from the gradient mask), "none".
+    """
+    if mode == "none" or not cfg.moe.enabled:
+        return None
+    P = cfg.pattern_period
+    n_periods = cfg.num_layers // P
+    init_val = cfg.moe.top_k / max(k_client, 1)
+    out = {}
+    for pos in range(P):
+        if cfg.layer_is_moe(pos):
+            out[f"pos{pos}"] = jnp.full((n_periods,), init_val, jnp.float32)
+    return out or None
+
+
+def make_trainable(lora: Optional[PyTree],
+                   rescaler: Optional[PyTree]) -> PyTree:
+    """Assemble the client's trainable tree in the form model.forward expects."""
+    t: dict = {}
+    if lora is not None:
+        t["lora"] = lora
+    if rescaler is not None:
+        t["rescaler"] = rescaler
+    return t
+
+
+# --------------------------------------------------------------------------
+# rank surgery (HLoRA / FlexLoRA substrate)
+# --------------------------------------------------------------------------
+
+def _map_pairs(fn, lora: PyTree) -> PyTree:
+    """Apply fn({"a","b"}) -> {"a","b"} to every adapter pair."""
+    def rec(node):
+        if isinstance(node, dict) and set(node) == {"a", "b"}:
+            return fn(node)
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        return node
+    return rec(lora)
+
+
+def truncate_rank(lora: PyTree, r_client: int) -> PyTree:
+    """HLoRA distribution: keep the first ``r_client`` rank components."""
+    def fn(pair):
+        return {"a": pair["a"][..., :r_client],
+                "b": pair["b"][..., :r_client, :]}
+    return _map_pairs(fn, lora)
+
+
+def pad_rank(lora: PyTree, r_full: int) -> PyTree:
+    """Zero-pad a truncated adapter back to the server rank (for HLoRA's
+    sparsity-weighted aggregation)."""
+    def fn(pair):
+        r = pair["a"].shape[-1]
+        if r == r_full:
+            return pair
+        pa = jnp.zeros(pair["a"].shape[:-1] + (r_full - r,), pair["a"].dtype)
+        pb = jnp.zeros(pair["b"].shape[:-2] + (r_full - r,) +
+                       pair["b"].shape[-1:], pair["b"].dtype)
+        return {"a": jnp.concatenate([pair["a"], pa], axis=-1),
+                "b": jnp.concatenate([pair["b"], pb], axis=-2)}
+    return _map_pairs(fn, lora)
+
+
+def merge_delta(lora: PyTree, scale: float) -> PyTree:
+    """ΔW = scale · A @ B per adapter (FlexLoRA aggregation operand)."""
+    def fn(pair):
+        delta = jnp.einsum("...ir,...ro->...io",
+                           pair["a"].astype(jnp.float32),
+                           pair["b"].astype(jnp.float32)) * scale
+        return delta.astype(pair["a"].dtype)
+    return _map_pairs(fn, lora)
+
+
+def svd_refactor(delta: PyTree, rank: int, scale: float) -> PyTree:
+    """FlexLoRA redistribution: ΔW --SVD--> (A, B) at ``rank``.
+
+    ΔW = U S V^T;  A = U_r sqrt(S_r),  B = sqrt(S_r) V_r^T / scale so that
+    scale·A·B reproduces the best rank-r approximation of ΔW.
+    """
+    def fn(dw):
+        f32 = dw.astype(jnp.float32)
+        u, s, vt = jnp.linalg.svd(f32, full_matrices=False)
+        r = min(rank, s.shape[-1])
+        sq = jnp.sqrt(s[..., :r])
+        a = u[..., :, :r] * sq[..., None, :]
+        b = sq[..., :, None] * vt[..., :r, :] / scale
+        return {"a": a.astype(dw.dtype), "b": b.astype(dw.dtype)}
+
+    def rec(node):
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        return fn(node)
+    return rec(delta)
+
+
+# --------------------------------------------------------------------------
+# merging adapters into base weights (deployment path)
+# --------------------------------------------------------------------------
+
+def merge_into_params(params: PyTree, lora: PyTree, scale: float) -> PyTree:
+    """Return params with W := W + scale·A·B applied wherever adapters exist."""
+    def rec(p_node, l_node):
+        if not isinstance(l_node, dict):
+            return p_node
+        if set(l_node) == {"a", "b"}:
+            delta = jnp.einsum("...ir,...ro->...io",
+                               l_node["a"].astype(jnp.float32),
+                               l_node["b"].astype(jnp.float32)) * scale
+            return (p_node.astype(jnp.float32) + delta).astype(p_node.dtype)
+        if isinstance(p_node, dict):
+            return {k: rec(v, l_node[k]) if k in l_node else v
+                    for k, v in p_node.items()}
+        return p_node
+
+    merged_blocks = {k: rec(params["blocks"][k], lora["blocks"].get(k, {}))
+                     for k in params["blocks"]}
+    out = dict(params)
+    out["blocks"] = merged_blocks
+    return out

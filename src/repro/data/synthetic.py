@@ -1,0 +1,152 @@
+"""Synthetic instruction-tuning corpus.
+
+The container is offline so AlpaGasus/Dolly cannot be downloaded.  What the
+FLAME experiments actually need from the data is (a) a *learnable*
+next-token structure so fine-tuning moves held-out loss, and (b) *task
+heterogeneity* so Dirichlet partitioning produces the skewed per-client
+distributions (Figure 2's expert-activation imbalance emerges from this).
+
+We generate both with a seeded cluster-mixture Markov corpus:
+
+  * ``n_clusters`` latent "tasks"; each task owns a random first-order
+    Markov transition matrix over the vocabulary (peaked, so there is
+    real signal to learn) and a distinct prompt prefix distribution;
+  * an example = [BOS, prompt tokens, SEP, response tokens, EOS] with a
+    loss mask over the response (instruction-tuning convention — matches
+    the paper's Alpaca prompt-template masking);
+  * cluster identity is attached to every example so the Dirichlet
+    partitioner can distribute *clusters* unevenly across clients
+    (exactly how the paper induces heterogeneity with α).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 512
+    n_clusters: int = 8
+    n_examples: int = 2048
+    seq_len: int = 128
+    prompt_len: int = 32
+    peak: float = 12.0       # Markov sharpness: higher = more learnable
+    seed: int = 0
+    num_codebooks: int = 0   # >0 -> audio-token layout (B, S, K)
+
+    @property
+    def bos(self) -> int:
+        return 0
+
+    @property
+    def sep(self) -> int:
+        return 1
+
+    @property
+    def eos(self) -> int:
+        return 2
+
+    @property
+    def first_content(self) -> int:
+        return 3
+
+
+@dataclass
+class Corpus:
+    tokens: np.ndarray    # (N, S) or (N, S, K) int32
+    labels: np.ndarray    # same shape, shifted targets
+    mask: np.ndarray      # (N, S) float32 — 1 on response positions
+    clusters: np.ndarray  # (N,) int32 — latent task id
+
+
+def _cluster_transition(rng: np.random.Generator, vocab: int,
+                        peak: float) -> np.ndarray:
+    """Row-stochastic transition matrix, sharply peaked per row."""
+    logits = rng.normal(size=(vocab, vocab)).astype(np.float32)
+    # bias towards a cluster-specific permutation "skeleton"
+    perm = rng.permutation(vocab)
+    logits[np.arange(vocab), perm] += peak
+    z = logits - logits.max(axis=1, keepdims=True)
+    p = np.exp(z)
+    return p / p.sum(axis=1, keepdims=True)
+
+
+def _sample_chain(rng, trans, start, length):
+    out = np.empty(length, np.int64)
+    cur = start
+    for i in range(length):
+        cur = rng.choice(trans.shape[0], p=trans[cur])
+        out[i] = cur
+    return out
+
+
+def make_corpus(cfg: DataConfig) -> Corpus:
+    rng = np.random.default_rng(cfg.seed)
+    v = cfg.vocab_size
+    content = v - cfg.first_content
+    trans = [_cluster_transition(rng, content, cfg.peak)
+             for _ in range(cfg.n_clusters)]
+    # cluster-specific prompt start distributions
+    starts = rng.integers(0, content, size=(cfg.n_clusters, 4))
+
+    S = cfg.seq_len
+    # clamp the prompt so short sequences still leave room for a response
+    prompt_len = min(cfg.prompt_len, max(S // 2 - 2, 1))
+    resp_len = S - prompt_len - 3              # BOS, SEP, EOS
+    toks = np.empty((cfg.n_examples, S), np.int64)
+    mask = np.zeros((cfg.n_examples, S), np.float32)
+    clusters = rng.integers(0, cfg.n_clusters, cfg.n_examples)
+
+    for n in range(cfg.n_examples):
+        c = int(clusters[n])
+        start = int(rng.choice(starts[c]))
+        prompt = _sample_chain(rng, trans[c], start, prompt_len)
+        resp = _sample_chain(rng, trans[c], int(prompt[-1]), resp_len)
+        row = np.concatenate([[cfg.bos - cfg.first_content],
+                              prompt, [cfg.sep - cfg.first_content],
+                              resp, [cfg.eos - cfg.first_content]])
+        toks[n] = row + cfg.first_content
+        # loss on response tokens + EOS (prediction targets are shifted)
+        mask[n, prompt_len + 1:] = 1.0
+
+    labels = np.roll(toks, -1, axis=1)
+    labels[:, -1] = cfg.eos
+    mask[:, -1] = 0.0
+
+    if cfg.num_codebooks > 0:
+        K = cfg.num_codebooks
+        toks_k = np.stack([(toks + k * 7) % cfg.vocab_size
+                           for k in range(K)], axis=-1)
+        labels_k = np.roll(toks_k, -1, axis=1)
+        labels_k[:, -1] = cfg.eos
+        return Corpus(toks_k.astype(np.int32), labels_k.astype(np.int32),
+                      mask, clusters.astype(np.int32))
+
+    return Corpus(toks.astype(np.int32), labels.astype(np.int32), mask,
+                  clusters.astype(np.int32))
+
+
+def split_corpus(c: Corpus, train: float = 0.8, val: float = 0.1
+                 ) -> Tuple[Corpus, Corpus, Corpus]:
+    """80/10/10 split (paper §3)."""
+    n = len(c.tokens)
+    n_tr, n_val = int(n * train), int(n * val)
+
+    def take(sl):
+        return Corpus(c.tokens[sl], c.labels[sl], c.mask[sl], c.clusters[sl])
+
+    return (take(slice(0, n_tr)), take(slice(n_tr, n_tr + n_val)),
+            take(slice(n_tr + n_val, n)))
+
+
+def batches(c: Corpus, batch_size: int, *, rng: np.random.Generator,
+            drop_last: bool = True):
+    """Shuffled minibatch iterator of (tokens, labels, mask)."""
+    idx = rng.permutation(len(c.tokens))
+    end = (len(idx) // batch_size) * batch_size if drop_last else len(idx)
+    for i in range(0, end, batch_size):
+        sl = idx[i:i + batch_size]
+        yield c.tokens[sl], c.labels[sl], c.mask[sl]

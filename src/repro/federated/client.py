@@ -1,0 +1,129 @@
+"""Client-side local training (one federated participant).
+
+A client owns a data shard, a resource budget (k_i experts for FLAME /
+LoRA rank r_i for the compression baselines), and runs ``local_epochs`` of
+Adam over its shard each round (paper A2.2: Adam, lr 1.5e-4, batch 16,
+1 local epoch).
+
+The jit'd train step returns per-expert activation counts; the client
+accumulates them into the activation frequency a_i^j / S_i that the server's
+activation-aware aggregation consumes (token-level frequency — see
+core/aggregation.py docstring for the edge-case analysis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..core import lora as lora_lib
+from ..data.synthetic import Corpus, batches
+from ..models import model as model_lib
+from ..optim import adam
+
+PyTree = Any
+
+
+@dataclass
+class ClientState:
+    client_id: int
+    shard: Corpus
+    k: int                        # FLAME expert budget k_i
+    rank: int                     # LoRA rank (baselines truncate this)
+    rescaler: Optional[PyTree]    # client-local s_i (persists across rounds)
+    rescaler_mode: str = "learnable"
+
+    @property
+    def dataset_size(self) -> int:
+        return len(self.shard.tokens)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "tc", "rescaler_trainable"))
+def _train_step(cfg: ModelConfig, params, trainable, opt_state, tokens,
+                labels, mask, *, k: int, tc: TrainConfig,
+                rescaler_trainable: bool):
+    def loss_fn(tr):
+        loss, counts = model_lib.lm_loss(cfg, params, tokens, labels, mask,
+                                         trainable=tr, k=k)
+        return loss, counts
+
+    (loss, counts), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+    if not rescaler_trainable and "rescaler" in grads:
+        grads = dict(grads)
+        grads["rescaler"] = jax.tree.map(jnp.zeros_like, grads["rescaler"])
+    new_trainable, new_opt = adam.update(
+        grads, opt_state, trainable, lr=tc.learning_rate, beta1=tc.beta1,
+        beta2=tc.beta2, eps=tc.eps, weight_decay=tc.weight_decay,
+        grad_clip=tc.grad_clip)
+    return new_trainable, new_opt, loss, counts
+
+
+def local_train(cfg: ModelConfig, params: PyTree, global_lora: PyTree,
+                client: ClientState, tc: TrainConfig, round_seed: int
+                ) -> Tuple[PyTree, Dict[str, jnp.ndarray], float, Dict]:
+    """Run the client's local epoch(s).
+
+    Returns (trained_lora, activation_frequencies, total_tokens, info).
+    ``global_lora`` arrives already shaped for this client (full for FLAME,
+    rank-truncated for HLoRA/FlexLoRA).
+    """
+    trainable = {"lora": global_lora}
+    if client.rescaler is not None:
+        trainable["rescaler"] = client.rescaler
+    opt_state = adam.init(trainable)
+    rng = np.random.default_rng(round_seed * 10_007 + client.client_id)
+
+    count_sums: Dict[str, jnp.ndarray] = {}
+    total_tokens = 0.0
+    losses = []
+    # tiny shards (Dirichlet tail clients) still get >= 1 batch per epoch
+    bs = max(1, min(tc.batch_size, len(client.shard.tokens)))
+    for _ in range(tc.local_epochs):
+        for tokens, labels, mask in batches(client.shard, bs, rng=rng):
+            tokens = jnp.asarray(tokens)
+            labels = jnp.asarray(labels)
+            mask = jnp.asarray(mask)
+            trainable, opt_state, loss, counts = _train_step(
+                cfg, params, trainable, opt_state, tokens, labels, mask,
+                k=client.k, tc=tc,
+                rescaler_trainable=(client.rescaler_mode == "learnable"))
+            losses.append(float(loss))
+            # counts: {pos: (n_periods, E)} per step — accumulate
+            for pos, c in counts.items():
+                count_sums[pos] = count_sums.get(pos, 0.0) + c
+            total_tokens += float(np.prod(tokens.shape[:2]))
+
+    freqs = {pos: np.asarray(c) / max(total_tokens, 1.0)
+             for pos, c in count_sums.items()}
+    if "rescaler" in trainable:
+        client.rescaler = trainable["rescaler"]   # persist s_i locally
+    info = {"mean_loss": float(np.mean(losses)) if losses else float("nan"),
+            "steps": len(losses)}
+    return trainable["lora"], freqs, total_tokens, info
+
+
+@partial(jax.jit, static_argnames=("cfg", "k"))
+def _eval_step(cfg, params, tokens, labels, mask, trainable, k):
+    loss, _ = model_lib.lm_loss(cfg, params, tokens, labels, mask,
+                                trainable=trainable, k=k)
+    return loss
+
+
+def evaluate(cfg: ModelConfig, params: PyTree, trainable: Optional[PyTree],
+             corpus: Corpus, *, k: int, batch_size: int = 16) -> float:
+    """Mean masked CE loss over a corpus."""
+    tot, n = 0.0, 0
+    rng = np.random.default_rng(0)
+    for tokens, labels, mask in batches(corpus, batch_size, rng=rng,
+                                        drop_last=False):
+        loss = _eval_step(cfg, params, jnp.asarray(tokens),
+                          jnp.asarray(labels), jnp.asarray(mask),
+                          trainable, k)
+        tot += float(loss) * len(tokens)
+        n += len(tokens)
+    return tot / max(n, 1)

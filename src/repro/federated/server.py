@@ -1,0 +1,117 @@
+"""Server-side federated orchestration: one round per method.
+
+Implements the four compared methods end-to-end:
+
+  * ``flame``    — distribute full-rank per-expert LoRA; clients train with
+                   their k_i; aggregate with Eq. 6–7 (activation-aware).
+  * ``trivial``  — every client uses the globally smallest rank; plain
+                   FedAvg (the paper's "trivial" baseline: small uniform
+                   LoRA for all experts).
+  * ``hlora``    — distribute rank-truncated adapters per client budget;
+                   sparsity-weighted aggregation over rank components.
+  * ``flexlora`` — clients train truncated adapters; server aggregates full
+                   ΔW = s·A·B and SVD-refactors back to the server rank.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..configs.base import FederatedConfig, ModelConfig, TrainConfig
+from ..core import aggregation as agg
+from ..core import lora as lora_lib
+from . import client as client_lib
+
+PyTree = Any
+
+# the paper's budget grids (Appendix A1)
+FLAME_BUDGET_K = {"b1": 8, "b2": 4, "b3": 2, "b4": 1}
+MOE_BUDGET_RANKS = {"b1": 20, "b2": 12, "b3": 8, "b4": 6}
+DENSE_BUDGET_RANKS = {"b1": 40, "b2": 24, "b3": 16, "b4": 12}
+
+
+@dataclass
+class RoundResult:
+    round_idx: int
+    client_losses: List[float]
+    client_freqs: List[Dict[str, np.ndarray]]
+    participating: List[int]
+
+
+class FederatedServer:
+    """Holds the global LoRA state and runs communication rounds."""
+
+    def __init__(self, cfg: ModelConfig, params: PyTree, global_lora: PyTree,
+                 clients: Sequence[client_lib.ClientState],
+                 fed: FederatedConfig, tc: TrainConfig):
+        self.cfg = cfg
+        self.params = params
+        self.global_lora = global_lora
+        self.clients = list(clients)
+        self.fed = fed
+        self.tc = tc
+        self.history: List[RoundResult] = []
+        self._rng = np.random.default_rng(fed.seed + 999)
+
+    # ----------------------------------------------------------- distribution
+    def _distribute(self, c: client_lib.ClientState) -> PyTree:
+        m = self.fed.method
+        if m == "flame":
+            return self.global_lora                      # full rank, always
+        if m == "trivial":
+            r_min = min(cl.rank for cl in self.clients)
+            return lora_lib.truncate_rank(self.global_lora, r_min)
+        if m in ("hlora", "flexlora"):
+            return lora_lib.truncate_rank(self.global_lora, c.rank)
+        raise ValueError(f"unknown method {m!r}")
+
+    # ------------------------------------------------------------ aggregation
+    def _aggregate(self, loras: List[PyTree],
+                   freqs: List[Dict[str, np.ndarray]],
+                   sizes: List[float], parts: List[int]) -> PyTree:
+        m = self.fed.method
+        r_full = max(cl.rank for cl in self.clients)
+        if m == "flame":
+            return agg.flame_aggregate(loras, freqs, sizes,
+                                       self.fed.temperature)
+        if m == "trivial":
+            r_min = min(cl.rank for cl in self.clients)
+            small = agg.fedavg(loras, sizes)
+            # pad the uniformly-small global back to server rank storage
+            return lora_lib.pad_rank(small, r_full)
+        if m == "hlora":
+            ranks = [self.clients[i].rank for i in parts]
+            return agg.hlora_aggregate(loras, ranks, sizes, r_full)
+        if m == "flexlora":
+            return agg.flexlora_aggregate(loras, sizes, r_full,
+                                          self.cfg.lora.scale)
+        raise ValueError(m)
+
+    # ----------------------------------------------------------------- rounds
+    def run_round(self, round_idx: int) -> RoundResult:
+        n = len(self.clients)
+        n_part = max(1, int(round(self.fed.participation * n)))
+        parts = sorted(self._rng.choice(n, size=n_part, replace=False)
+                       .tolist())
+
+        loras, freqs, sizes, losses = [], [], [], []
+        for i in parts:
+            c = self.clients[i]
+            dist = self._distribute(c)
+            trained, f, _, info = client_lib.local_train(
+                self.cfg, self.params, dist, c, self.tc,
+                round_seed=self.fed.seed * 1000 + round_idx)
+            loras.append(trained)
+            freqs.append(f)
+            sizes.append(float(c.dataset_size))
+            losses.append(info["mean_loss"])
+
+        self.global_lora = self._aggregate(loras, freqs, sizes, parts)
+        res = RoundResult(round_idx, losses, freqs, parts)
+        self.history.append(res)
+        return res
+
+    def run(self) -> List[RoundResult]:
+        return [self.run_round(r) for r in range(self.fed.rounds)]

@@ -1,0 +1,77 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``interpret`` defaults to True unless running on real TPU hardware — the
+kernels are the TPU *target*; this container validates them on CPU via the
+Pallas interpreter.  Every op has a pure-jnp oracle in ``ref.py``; the
+``use_kernel=False`` path routes to the oracle so higher layers can switch
+implementations with one flag (and the dry-run lowers the jnp path, which
+GSPMD shards).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .lora_matmul import lora_matmul as _lora_pallas
+from .lora_matmul import lora_matmul_experts as _lora_experts_pallas
+from .topk_router import topk_router as _router_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_kernel: bool = True, interpret=None):
+    """q: (B,H,S,D); k,v: (B,KV,S,D)."""
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# fused LoRA matmul
+# --------------------------------------------------------------------------
+
+def lora_matmul(x, w, a, b, *, scale: float = 1.0, use_kernel: bool = True,
+                interpret=None):
+    if not use_kernel:
+        return ref.lora_matmul_ref(x, w, a, b, scale)
+    interpret = default_interpret() if interpret is None else interpret
+    return _lora_pallas(x, w, a, b, scale=scale, interpret=interpret)
+
+
+def lora_matmul_experts(x, w, a, b, *, scale: float = 1.0,
+                        use_kernel: bool = True, interpret=None):
+    if not use_kernel:
+        y = jnp.einsum("eck,ekn->ecn", x, w)
+        xa = jnp.einsum("eck,ekr->ecr", x, a)
+        return (y + jnp.einsum("ecr,ern->ecn", xa, b) * scale).astype(x.dtype)
+    interpret = default_interpret() if interpret is None else interpret
+    return _lora_experts_pallas(x, w, a, b, scale=scale, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# top-k router
+# --------------------------------------------------------------------------
+
+def router(logits, k: int, *, use_kernel: bool = True, interpret=None):
+    """Returns (weights, mask, counts) — see ref.topk_router_ref."""
+    if not use_kernel:
+        return ref.topk_router_ref(logits, k)
+    interpret = default_interpret() if interpret is None else interpret
+    return _router_pallas(logits, k, interpret=interpret)

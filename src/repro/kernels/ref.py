@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are deliberately naive (materialise the full score matrix, loop the
+top-k) — clarity over speed.  Kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jnp.ndarray:
+    """q: (B,H,S,D); k,v: (B,KV,S,D) -> (B,H,S,D).  fp32 softmax."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    if causal:
+        valid = kpos <= qpos
+        if window > 0:
+            valid &= kpos > qpos - window
+        s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """x: (M,K); w: (K,N); a: (K,r); b: (r,N) -> x@w + (x@a)@b·scale."""
+    f32 = jnp.float32
+    y = x.astype(f32) @ w.astype(f32)
+    y = y + (x.astype(f32) @ a.astype(f32)) @ b.astype(f32) * scale
+    return y.astype(x.dtype)
+
+
+def topk_router_ref(logits: jnp.ndarray, k: int):
+    """logits: (T,E) -> (weights (T,E) fp32, mask (T,E) fp32, counts (E,)).
+
+    Softmax -> iterative argmax top-k -> renormalised weights.  Identical
+    semantics to models.moe_layer.topk_routing plus the count reduction.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    masked = probs
+    mask = jnp.zeros_like(probs)
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)
+        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        mask = mask + onehot
+        masked = masked * (1.0 - onehot)
+    weights = probs * mask
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, mask, mask.sum(axis=0)

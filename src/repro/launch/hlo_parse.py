@@ -1,0 +1,202 @@
+"""Trip-count-aware HLO accounting.
+
+CALIBRATION (see EXPERIMENTS.md §Dry-run): XLA's ``cost_analysis()`` counts
+every computation ONCE — a ``lax.scan`` of 126 layers reports the FLOPs of a
+single layer body.  Measured: scan(10 matmuls) reports exactly 1 matmul of
+FLOPs.  Any roofline built directly on cost_analysis() under-counts a
+scanned-and-microbatched train step by ~n_layers × n_micro (≈2000×).
+
+This module parses the optimized HLO text instead:
+
+  * split the module into named computations;
+  * find every ``while`` op, its body/condition computations, and the trip
+    count (the s32 constant feeding the condition's LT compare — lax.scan
+    always lowers to this pattern);
+  * propagate multipliers: ops inside a while body execute
+    ``trip × multiplier(parent)`` times (nested scans multiply);
+  * sum collective bytes **weighted by multiplier** — an all-gather inside
+    the layer scan of a 16-microbatch step costs 126·16 executions, not 1.
+
+Shapes in the optimized HLO are per-device shards, so the returned bytes are
+per-device — divide by per-chip link bandwidth directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text.
+
+    HLO prints each computation starting at column 0 as
+    ``%name (args...) -> retty {`` (or ``ENTRY %name ...``); the body lines
+    are indented and the closing ``}`` is back at column 0.  Brace counts
+    inside shape layouts (``{1,0}``) balance within their own line, so a
+    column-0 ``}`` reliably terminates the computation."""
+    comps: Dict[str, str] = {}
+    lines = hlo.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i]
+        m = _COMP_HDR.match(line)
+        if m and not line.startswith((" ", "\t")) and \
+                line.rstrip().endswith("{"):
+            name = m.group(1)
+            body = [line]
+            i += 1
+            while i < len(lines) and not lines[i].startswith("}"):
+                body.append(lines[i])
+                i += 1
+            comps[name] = "\n".join(body)
+        i += 1
+    return comps
+
+
+@dataclasses.dataclass
+class WhileInfo:
+    parent: str
+    cond: str
+    body: str
+    trip: int
+
+
+def find_whiles(comps: Dict[str, str]) -> List[WhileInfo]:
+    out = []
+    for parent, text in comps.items():
+        for m in _WHILE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trip = _trip_count(comps, cond)
+            out.append(WhileInfo(parent, cond, body, trip))
+    return out
+
+
+def _trip_count(comps: Dict[str, str], cond: str) -> int:
+    """Max s32 constant visible from the condition computation (following
+    one level of called fusions) — lax.scan lowers to `lt(i, trips)`."""
+    seen = set()
+    frontier = [cond]
+    best = 1
+    while frontier:
+        name = frontier.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        text = comps[name]
+        for c in _CONST.findall(text):
+            best = max(best, int(c))
+        for m in _CALL.finditer(text):
+            frontier.append(m.group(1))
+    return best
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, str], Dict[str, float]]:
+    """Returns (computations, multiplier per computation name).
+
+    multiplier = product of trip counts of enclosing whiles.  Non-while
+    call edges (fusions, custom-calls) propagate the caller's multiplier.
+    """
+    comps = split_computations(hlo)
+    whiles = find_whiles(comps)
+    parent_edge: Dict[str, Tuple[str, float]] = {}
+    for w in whiles:
+        parent_edge[w.body] = (w.parent, float(w.trip))
+        parent_edge[w.cond] = (w.parent, float(w.trip))
+    for parent, text in comps.items():
+        for m in _CALL.finditer(text):
+            callee = m.group(1)
+            if callee not in parent_edge:
+                parent_edge[callee] = (parent, 1.0)
+
+    mult: Dict[str, float] = {}
+
+    def resolve(name: str, depth=0) -> float:
+        if name in mult:
+            return mult[name]
+        if depth > 64 or name not in parent_edge:
+            mult[name] = 1.0
+            return 1.0
+        parent, trip = parent_edge[name]
+        m = trip * resolve(parent, depth + 1)
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+    return comps, mult
+
+
+_METADATA = re.compile(r'op_name="([^"]*)"')
+
+
+def top_collectives(hlo: str, n: int = 20) -> List[Dict]:
+    """The n most expensive collectives (trip-weighted bytes), with their
+    jaxpr provenance (op_name metadata) — the perf-loop's profile view."""
+    comps, mult = computation_multipliers(hlo)
+    rows = []
+    for name, text in comps.items():
+        m = mult.get(name, 1.0)
+        for line in text.splitlines():
+            cm = _COLLECTIVE.search(line)
+            if not cm:
+                continue
+            b = shape_bytes(cm.group(1))
+            md = _METADATA.search(line)
+            rows.append({
+                "kind": cm.group(2), "comp": name, "mult": m,
+                "bytes_once": b, "bytes_total": b * m,
+                "op_name": md.group(1) if md else "?",
+                "shape": cm.group(1),
+            })
+    rows.sort(key=lambda r: -r["bytes_total"])
+    return rows[:n]
+
+
+def collective_bytes_weighted(hlo: str) -> Tuple[Dict[str, float],
+                                                 Dict[str, float]]:
+    """Per-kind (bytes, op-executions), weighted by loop trip multipliers.
+
+    all-reduce is charged 2× (ring moves ~2·(n-1)/n of the buffer)."""
+    comps, mult = computation_multipliers(hlo)
+    bytes_by_kind: Dict[str, float] = {}
+    execs_by_kind: Dict[str, float] = {}
+    for name, text in comps.items():
+        m = mult.get(name, 1.0)
+        for cm in _COLLECTIVE.finditer(text):
+            shape_str, kind = cm.group(1), cm.group(2)
+            b = shape_bytes(shape_str) * (2.0 if kind == "all-reduce" else 1.0)
+            bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + b * m
+            execs_by_kind[kind] = execs_by_kind.get(kind, 0.0) + m
+    return bytes_by_kind, execs_by_kind

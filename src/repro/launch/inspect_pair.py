@@ -1,0 +1,54 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Perf-loop profile view: compile one (arch × shape) and print the top
+collectives by trip-weighted bytes with jaxpr provenance.
+
+  PYTHONPATH=src python -m repro.launch.inspect_pair llama3-405b train_4k \
+      [--multi-pod] [--n-micro 8] [--act-mode seq]
+"""
+import argparse
+import json
+
+from . import hlo_parse
+from .dryrun import run_pair
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--act-mode", default=None)
+    ap.add_argument("--mesh", default=None, help="e.g. 64x4")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.n_micro is not None:
+        overrides["n_micro"] = args.n_micro
+    if args.act_mode is not None:
+        overrides["act_mode"] = args.act_mode
+
+    mesh_shape = (tuple(int(x) for x in args.mesh.split("x"))
+                  if args.mesh else None)
+    rec = run_pair(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=overrides, keep_hlo=True,
+                   mesh_shape=mesh_shape)
+    hlo = rec.pop("hlo_text")
+    r = rec["roofline"]
+    print(f"\n{args.arch} × {args.shape} ({rec['mesh']}): "
+          f"peak {rec['memory']['peak_gb']:.2f} GB | "
+          f"tc {r['t_compute_ms']:.0f} tm {r['t_memory_ms']:.0f} "
+          f"tx {r['t_collective_ms']:.0f} ms | knobs {rec['meta'].get('n_micro'), rec['meta'].get('act_mode'), rec['meta'].get('num_groups')}")
+    print(f"\ntop {args.top} collectives (trip-weighted):")
+    print(f"{'kind':20s} {'GB_total':>9s} {'mult':>7s} {'shape':28s} op_name")
+    for row in hlo_parse.top_collectives(hlo, args.top):
+        print(f"{row['kind']:20s} {row['bytes_total']/2**30:9.2f} "
+              f"{row['mult']:7.0f} {row['shape'][:28]:28s} "
+              f"{row['op_name'][-80:]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms, each in seconds on the target TPU v5e pod:
+
+  compute    = HLO_FLOPs        / (chips · 197e12 FLOP/s bf16)
+  memory     = HLO_bytes        / (chips · 819e9  B/s HBM)
+  collective = collective_bytes / (chips · 50e9   B/s ICI per link)
+
+CALIBRATION (measured, see EXPERIMENTS.md §Dry-run): after GSPMD
+partitioning, ``cost_analysis()`` reports **per-device** FLOPs/bytes and the
+optimized-HLO shapes are per-device shards.  The ``/chips`` in the formulas
+above is therefore already applied — the code divides per-device quantities
+by single-chip rates.  MODEL_FLOPS stays global, so the useful-compute ratio
+is ``model_flops / (hlo_flops · chips)``.
+
+``cost_analysis()`` provides HLO_FLOPs and bytes-accessed.  Collective bytes
+are NOT in cost_analysis — we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ICI hop-count folded into the single-link bandwidth
+model; cross-pod ops are charged at DCN bandwidth).
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (per forward) — the
+"useful" compute; HLO_FLOPs / MODEL_FLOPS exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per chip) ----
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 6.25e9              # bytes/s cross-pod (50 Gbit)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape string like 'bf16[128,4096]{1,0}' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    Output shape ≈ the data volume crossing the interconnect per op (for
+    all-reduce it is one round in/out — ring all-reduce moves 2·(n-1)/n ≈ 2×
+    the buffer; we fold that factor into the per-kind multiplier)."""
+    by_bytes: Dict[str, int] = {}
+    by_count: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        by_bytes[kind] = by_bytes.get(kind, 0) + int(b * mult)
+        by_count[kind] = by_count.get(kind, 0) + 1
+    return CollectiveStats(by_bytes, by_count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    bytes_per_device: float      # peak HBM from memory_analysis
+    collectives: Dict[str, int]
+    meta: Dict[str, Any]
+
+    # ---- the three terms (seconds); hlo_* are PER-DEVICE quantities ----
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs · chips) — useful share of compiled
+        compute (catches remat / redundancy waste)."""
+        return self.model_flops / max(self.hlo_flops * self.chips, 1.0)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-model step time: max of the three terms (assumes perfect
+        overlap of the other two)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline-model step time."""
+        return (self.model_flops /
+                (self.step_time * self.chips * PEAK_FLOPS)
+                if self.step_time else 0.0)
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.collective_bytes / 1e9,
+            "model_gflops": self.model_flops / 1e9,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "useful_frac": self.useful_fraction,
+            "mfu": self.mfu,
+            "hbm_gb_per_device": self.bytes_per_device / 2 ** 30,
+            **{f"n_{k}": v for k, v in self.collectives.items()},
+        }
+
+
+def extract(compiled, hlo_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, model_flops: float,
+            device_flops: float, device_bytes: float,
+            meta: Optional[Dict[str, Any]] = None) -> Roofline:
+    """Build a Roofline record.
+
+    compute/memory terms use the ANALYTIC per-device models
+    (launch/analytic.py — cost_analysis() counts scan bodies once and is
+    useless at depth; its raw numbers are kept in meta for reference);
+    the collective term uses trip-count-weighted HLO parsing
+    (launch/hlo_parse.py)."""
+    from . import hlo_parse
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    per_dev = float(
+        getattr(mem, "temp_size_in_bytes", 0) +
+        getattr(mem, "argument_size_in_bytes", 0) +
+        getattr(mem, "output_size_in_bytes", 0) -
+        getattr(mem, "alias_size_in_bytes", 0))
+    coll_bytes, coll_execs = hlo_parse.collective_bytes_weighted(hlo_text)
+    meta = dict(meta or {})
+    meta["hlo_flops_body_once"] = float(cost.get("flops", 0.0))
+    meta["hlo_bytes_body_once"] = float(cost.get("bytes accessed", 0.0))
+    meta["collective_bytes_by_kind"] = coll_bytes
+    meta["collective_execs_by_kind"] = coll_execs
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=device_flops, hlo_bytes=device_bytes,
+        collective_bytes=float(sum(coll_bytes.values())),
+        model_flops=model_flops, bytes_per_device=per_dev,
+        collectives={k: int(v) for k, v in coll_execs.items()},
+        meta=meta)

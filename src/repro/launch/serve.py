@@ -1,0 +1,88 @@
+"""Batched serving launcher (decode loop on the production mesh).
+
+``--local`` runs a real prefill + autoregressive decode loop on this
+host's devices with a reduced config, demonstrating FLAME's reduced-k
+deployment; without ``--local`` it builds the sharded serve step for the
+production mesh (use repro.launch.dryrun in this offline container).
+
+  PYTHONPATH=src python -m repro.launch.serve --local \
+      --arch olmoe-1.3b-6.9b --k 1 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import INPUT_SHAPES, ShapeConfig
+from ..configs.registry import get_config
+from ..models import model as model_lib
+from . import steps as steps_lib
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1.3b-6.9b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--k", type=int, default=None,
+                    help="activated experts at serving time (FLAME)")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if not args.local:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        cfg = get_config(args.arch, "full")
+        shape = INPUT_SHAPES[args.shape]
+        with mesh:
+            bundle = steps_lib.build_serve(cfg, shape, mesh, k=args.k)
+            print(f"serve_step for {cfg.name} × {shape.name} on "
+                  f"{mesh.devices.shape}: cache "
+                  f"{bundle.meta['cache_bytes'] / 2 ** 30:.1f} GiB global, "
+                  f"k={bundle.meta['k']}")
+            print("lowering...")
+            compiled = bundle.fn.lower(*bundle.args).compile()
+            mem = compiled.memory_analysis()
+            print(f"compiled; {mem.temp_size_in_bytes / 2 ** 30:.2f} GiB "
+                  f"temp/device — ready for real hardware")
+        return
+
+    # ---- local demo: prefill + decode a batch of requests ----
+    cfg = get_config(args.arch, "smoke")
+    k = args.k if args.k is not None else (cfg.moe.top_k or None)
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(key, cfg)
+    B, prompt_len = 4, 16
+    total = prompt_len + args.new_tokens
+    shape_tok = ((B, prompt_len, cfg.num_codebooks) if cfg.num_codebooks
+                 else (B, prompt_len))
+    prompts = jax.random.randint(key, shape_tok, 0, cfg.vocab_size)
+
+    t0 = time.time()
+    logits, cache = model_lib.prefill(cfg, params, prompts, k=k,
+                                      cache_len=total)
+    decode = jax.jit(
+        lambda p, c, t, pos: model_lib.decode_step(cfg, p, c, t, pos, k=k))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if cfg.num_codebooks:
+        tok = tok.reshape(B, 1, cfg.num_codebooks)
+    out = [tok]
+    for i in range(args.new_tokens - 1):
+        logits, cache = decode(params, cache, tok, prompt_len + i)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if cfg.num_codebooks:
+            tok = tok.reshape(B, 1, cfg.num_codebooks)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    print(f"{cfg.name} (k={k}): decoded {gen.shape} in "
+          f"{time.time() - t0:.2f}s")
+    print("sample token ids:", np.asarray(gen)[0].ravel()[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""GSPMD sharding rules for every parameter / state / input tree.
+
+The rules implement DESIGN.md §8:
+
+  * 2-D weight sharding for every large matrix: output-features (or the
+    expert axis for MoE) on ``model`` (Megatron tensor / expert parallelism)
+    and input-features on ``data`` (FSDP — GSPMD all-gathers the shard
+    group just-in-time).  This is what makes llama3-405b + its LoRA/Adam
+    state fit 256×16 GB chips with base weights frozen.
+  * experts: expert axis → ``model`` (expert parallelism; the dispatch and
+    combine einsums become all-to-alls on ``model``).
+  * LoRA adapters inherit their base weight's sharding on the matching
+    dims; the rank dim (tiny) is replicated.
+  * decode KV cache: batch → ``data``, sequence → ``model`` (flash-decode
+    style; GSPMD merges the partial softmax); mamba state: heads → ``model``.
+  * batch dims → ``("pod", "data")`` when divisible, else replicated
+    (long_500k has batch 1).
+
+Specs are built by walking the *abstract* tree (jax.eval_shape — no
+allocation) and pattern-matching (path, ndim), so the same rule function
+covers all six architecture families.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return "/".join(out)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _maybe(spec_axes, dim: int, mesh: Mesh):
+    """Drop a sharding axis when the dim isn't divisible (XLA pads uneven
+    shardings, but padded all-gathers on tiny dims are pure waste)."""
+    return spec_axes if spec_axes and _divisible(dim, mesh, spec_axes) else None
+
+
+# --------------------------------------------------------------------------
+# base parameters
+# --------------------------------------------------------------------------
+
+def _param_rule(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                fsdp: Optional[str], model: str) -> P:
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+
+    # ---- embedding / head ----
+    if path.startswith("embed"):
+        if nd == 3:   # (K, V, D) codebooks
+            return P(None, _maybe(model, shape[1], mesh), None)
+        return P(_maybe(model, shape[0], mesh), None)            # (V, D)
+    if path.startswith("lm_head"):
+        if nd == 3:   # (K, D, V)
+            return P(None, None, _maybe(model, shape[2], mesh))
+        return P(None, _maybe(model, shape[1], mesh))            # (D, V)
+    if path.startswith("final_norm"):
+        return P()
+
+    # ---- blocks (leading axis = n_periods, always unsharded) ----
+    if "experts" in path:
+        # (np, E, d_in, d_out): expert-parallel on model, FSDP on d_in
+        return P(None, _maybe(model, shape[1], mesh),
+                 _maybe(fsdp, shape[2], mesh), None)
+    if leaf == "router":
+        return P(None, None, None)                                # small
+    if leaf in ("wq", "wk", "wv"):
+        return P(None, _maybe(fsdp, shape[1], mesh),
+                 _maybe(model, shape[2], mesh))
+    if leaf == "wo":
+        return P(None, _maybe(model, shape[1], mesh),
+                 _maybe(fsdp, shape[2], mesh))
+    if leaf in ("w1", "w3"):                                      # dense/shared
+        return P(None, _maybe(fsdp, shape[1], mesh),
+                 _maybe(model, shape[2], mesh))
+    if leaf == "w2":
+        return P(None, _maybe(model, shape[1], mesh),
+                 _maybe(fsdp, shape[2], mesh))
+    if leaf == "in_proj":                                         # mamba
+        return P(None, _maybe(fsdp, shape[1], mesh),
+                 _maybe(model, shape[2], mesh))
+    if leaf == "out_proj":
+        return P(None, _maybe(model, shape[1], mesh),
+                 _maybe(fsdp, shape[2], mesh))
+    # norms, conv, dt_bias, A_log, D, rescalers, scalars -> replicated
+    return P(*([None] * nd))
+
+
+def param_specs(cfg, abstract_params: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree mirroring ``init_params`` output."""
+    fsdp = "data" if "data" in mesh.axis_names else None
+    model = "model"
+
+    def rule(path, leaf):
+        return _param_rule(_path_str(path), leaf.shape, mesh, fsdp, model)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+# --------------------------------------------------------------------------
+# trainable tree (LoRA + rescaler)
+# --------------------------------------------------------------------------
+
+def _lora_rule(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: Optional[str], model: str) -> P:
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+    if "rescaler" in path:
+        return P(*([None] * nd))
+    if "experts" in path:
+        # a: (np, E, d_in, r) / b: (np, E, r, d_out) — follow expert sharding
+        if leaf == "a":
+            return P(None, _maybe(model, shape[1], mesh),
+                     _maybe(fsdp, shape[2], mesh), None)
+        return P(None, _maybe(model, shape[1], mesh), None, None)
+    if leaf == "a":   # (np, d_in, r): shard d_in like the base weight's input
+        return P(None, _maybe(fsdp, shape[1], mesh), None)
+    if leaf == "b":   # (np, r, d_out): shard d_out on model
+        return P(None, None, _maybe(model, shape[2], mesh))
+    return P(*([None] * nd))
+
+
+def trainable_specs(cfg, abstract_trainable: PyTree, mesh: Mesh) -> PyTree:
+    fsdp = "data" if "data" in mesh.axis_names else None
+
+    def rule(path, leaf):
+        return _lora_rule(_path_str(path), leaf.shape, mesh, fsdp, "model")
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_trainable)
+
+
+def opt_specs(trainable_spec: PyTree) -> PyTree:
+    """Adam state mirrors the trainable tree (mu/nu same sharding)."""
+    from ..optim.adam import AdamState
+    return AdamState(step=P(), mu=trainable_spec,
+                     nu=jax.tree.map(lambda s: s, trainable_spec))
+
+
+# --------------------------------------------------------------------------
+# inputs / batch
+# --------------------------------------------------------------------------
+
+def batch_spec(global_batch: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    """(B, S, ...) — shard B over ("pod","data") when divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    lead = axes if axes and global_batch % size == 0 else None
+    return P(lead, *([None] * extra_dims))
+
+
+# --------------------------------------------------------------------------
+# decode cache
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg, abstract_cache: PyTree, mesh: Mesh,
+                batch: int) -> PyTree:
+    """KV cache (np, B, Sc, KV, hd): batch→data, seq→model.
+    Mamba conv (np, B, C, W-1): C→model; ssm state (np, B, H, Pd, N): H→model."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_ax = baxes if baxes and batch % bsize == 0 else None
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        s = leaf.shape
+        if "/attn/" in p or p.endswith("/k") or p.endswith("/v"):
+            return P(None, b_ax, _maybe("model", s[2], mesh), None, None)
+        if p.endswith("conv"):
+            return P(None, b_ax, _maybe("model", s[2], mesh), None)
+        if p.endswith("ssm"):
+            return P(None, b_ax, _maybe("model", s[2], mesh), None, None)
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+# --------------------------------------------------------------------------
+# activation constraint helpers (used inside the step functions)
+# --------------------------------------------------------------------------
+
+def activation_spec(mesh: Mesh, mode: str, batch_ok: bool = True) -> P:
+    """Sharding constraint for the (B, S, D) residual stream.
+
+    mode: "batch" (B→data only), "dmodel" (also D→model — ZeRO-3-ish, slashes
+    the saved-activation footprint for remat'd training of wide models),
+    "seq" (S→model — sequence parallelism).
+    """
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = baxes if (baxes and batch_ok) else None
+    if mode == "dmodel":
+        return P(b, None, "model")
+    if mode == "seq":
+        return P(b, "model", None)
+    return P(b, None, None)
+
+
+def shardings(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every model input / state tree.
+
+``input_specs(cfg, shape)`` returns exactly what the corresponding step
+function consumes — weak-type-correct, shardable, and **zero allocation**
+(the full llama3-405b state exists only abstractly; the dry-run lowers and
+compiles against these).
+
+Modality note (the one sanctioned stub): the VLM/audio *frontends* are not
+implemented — chameleon's VQ image tokens share the text vocabulary so its
+backbone input is plain token ids, and musicgen consumes EnCodec codebook
+ids of shape (B, S, K=4).  Both are exactly what ``input_specs`` emits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core import lora as lora_lib
+from ..models import model as model_lib
+from ..optim import adam
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.num_codebooks > 0:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Abstract inputs for the step the shape lowers (train/prefill/decode)."""
+    if shape.kind == "train":
+        ts = _token_shape(cfg, shape.global_batch, shape.seq_len)
+        return {
+            "tokens": SDS(ts, jnp.int32),
+            "labels": SDS(ts, jnp.int32),
+            "mask": SDS((shape.global_batch, shape.seq_len), jnp.float32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": SDS(_token_shape(cfg, shape.global_batch,
+                                           shape.seq_len), jnp.int32)}
+    # decode: ONE new token against a seq_len-deep cache
+    return {
+        "tokens": SDS(_token_shape(cfg, shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# abstract state trees (params / trainable / optimizer / cache)
+# --------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: model_lib.init_params(k, cfg), key)
+
+
+def abstract_trainable(cfg: ModelConfig, k_client: int = 0,
+                       rescaler: str = "learnable") -> PyTree:
+    key = jax.random.PRNGKey(0)
+
+    def build(k):
+        params = model_lib.init_params(k, cfg)
+        lora = lora_lib.init_lora(k, cfg, params)
+        resc = None
+        if cfg.moe.enabled and rescaler != "none":
+            resc = lora_lib.init_rescalers(
+                cfg, k_client or cfg.moe.top_k, rescaler)
+        return lora_lib.make_trainable(lora, resc)
+
+    return jax.eval_shape(build, key)
+
+
+def abstract_opt_state(abstract_trainable_tree: PyTree) -> PyTree:
+    return jax.eval_shape(adam.init, abstract_trainable_tree)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    return jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, batch, seq_len))
+
+
+def state_bytes(tree: PyTree) -> int:
+    return sum(int(jnp.dtype(l.dtype).itemsize) *
+               int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+               for l in jax.tree.leaves(tree))

@@ -1,0 +1,404 @@
+"""pjit-able step functions + sharding assembly for the production mesh.
+
+One builder per input-shape kind:
+
+  * ``build_train``   — LoRA fine-tune step (the paper's client step):
+    microbatched gradient accumulation (``lax.scan``), remat'd layer scan,
+    Adam on the trainable (LoRA + rescaler) tree only — base weights are
+    frozen so they carry **no** optimizer state (this is what makes
+    llama3-405b fine-tuning fit 256 chips).
+  * ``build_prefill`` — forward + KV-cache build.
+  * ``build_serve``   — ONE token against a ``seq_len``-deep cache (decode);
+    cache donated so it updates in place.
+
+Each returns a ``StepBundle``: the jitted fn (with in/out shardings bound),
+the abstract example args, and metadata the dry-run records.
+
+FLAME integration: every step takes the *static* expert budget ``k`` —
+clients fine-tune with ``k_i ≤ k`` (Eq. 5) and serving uses the reduced
+activation directly (the paper's deployment-efficiency claim).  The train
+step also returns the summed per-expert activation counts the server's
+activation-aware aggregation (Eq. 6) consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, TrainConfig
+from ..models import model as model_lib
+from ..optim import adam
+from . import sharding as shd
+from . import specs as specs_lib
+
+PyTree = Any
+
+# per-device saved-activation budget used to auto-pick microbatching (bytes)
+ACT_BUDGET = 4 * 2 ** 30
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Any                      # jitted step
+    args: Tuple[PyTree, ...]     # abstract example args (ShapeDtypeStructs)
+    meta: Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# knob auto-selection (napkin math — see EXPERIMENTS.md §Perf for the
+# measured validation of these choices)
+# --------------------------------------------------------------------------
+
+def _data_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+
+
+def choose_train_knobs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                       ) -> Dict[str, Any]:
+    """Pick (n_micro, remat_chunk, act_mode) so the saved-activation
+    footprint fits the per-device budget.
+
+    Strategy (validated in EXPERIMENTS.md §Perf): keep activations
+    UNSHARDED (act_mode=batch — sharding them puts a collective on every
+    matmul) and use two-level (√L) checkpointing, which shrinks the saved
+    residuals from n_periods·|h| to (n_outer + chunk)·|h| per microbatch;
+    minimise n_micro (every microbatch re-gathers the FSDP-sharded weights).
+    Fall back to d_model-sharded activations only if even mb_local=1 with
+    √L remat doesn't fit."""
+    dp = _data_size(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    n_periods = cfg.num_layers // cfg.pattern_period
+    chunk = max(int(round(n_periods ** 0.5)), 1)
+    while n_periods % chunk:
+        chunk -= 1
+    n_saved = (n_periods // chunk + chunk) if chunk > 1 else n_periods
+    per_seq = n_saved * S * cfg.d_model * 2     # one (S,d) carry per boundary
+    # mamba SSD transients (Ldec (nc,H,L,L) + einsum partials, fp32) scale
+    # with the local batch and dwarf the carries for SSM/hybrid archs —
+    # ignoring them regressed jamba train to 85 GB/device (§Perf)
+    if any(cfg.layer_kind(l) == "ssm" for l in range(cfg.num_layers)):
+        from ..models.mamba2 import mamba_dims
+        dims = mamba_dims(cfg)
+        L = min(cfg.ssm.chunk_size, S)
+        per_seq += 3 * S * dims["n_heads"] * L * 4
+
+    n_micro = 1
+    while n_micro < B // max(dp, 1):
+        mb_local = max(B // (n_micro * dp), 1)
+        if mb_local * per_seq <= ACT_BUDGET:
+            break
+        n_micro *= 2
+    mb_local = max(B // (n_micro * dp), 1)
+    act_mode = "batch"
+    if mb_local * per_seq > ACT_BUDGET:
+        act_mode = "dmodel"      # last resort: shard the carry's d_model
+    return {"n_micro": n_micro, "act_mode": act_mode,
+            "remat_chunk": chunk if chunk > 1 else 0}
+
+
+def choose_num_groups(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh,
+                      target_group: int = 2048) -> int:
+    """GShard routing groups.  Two constraints:
+
+    1. groups shard over ``data`` (G a multiple of the data parallelism)
+       so the (G, T_g, E, C) dispatch one-hots stay shard-local;
+    2. T_g stays near ``target_group`` — capacity C grows ∝ T_g·k/E, so a
+       large group makes the dispatch tensor quadratic in T_g (the 166
+       GB/device blow-up the first dry-run sweep caught; see EXPERIMENTS.md
+       §Perf iteration 0).
+    """
+    if not cfg.moe.enabled:
+        return 1
+    T = batch * seq
+    if T <= target_group:
+        return 1
+    g = 1
+    while g * 2 <= T // target_group and T % (g * 2) == 0:
+        g *= 2
+    dp = _data_size(mesh)
+    while g < dp and T % (g * 2) == 0:     # ≥ one group per data shard
+        g *= 2
+    return g
+
+
+def _moe_shard_fns(mesh: Mesh):
+    """Sharding constraints for the MoE internals (EXPERIMENTS.md §Perf H1):
+    keep the (G,Tg,E,C) one-hots group-sharded with E FULL (restricting E on
+    the one-hot makes GSPMD all-gather it — ~500 GB/step on qwen3-moe); the
+    E→model restriction lands on the slot tensor where it's a local slice;
+    the combined token output goes straight back to group sharding."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def c(spec):
+        def f(t):
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, spec))
+        return f
+
+    # NOTE: an E→model constraint on the *combine* one-hot was tried and
+    # REFUTED — its backward re-gathers the one-hot (EXPERIMENTS.md §Perf
+    # H1 iteration 2: 110.6 s → 125.2 s).  Keep combine unconstrained.
+    return {
+        "dispatch": c(P(baxes, None, None, None)),
+        "slots": c(P(baxes, "model", None, None)),
+        "out": c(P(baxes, None, None)),
+    }
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, k: Optional[int],
+                    tc: TrainConfig, n_micro: int, act_mode: str,
+                    num_groups: int, remat: bool = True, remat_chunk: int = 0,
+                    rescaler_trainable: bool = True):
+    """Returns step(params, trainable, opt_state, tokens, labels, mask)
+    -> (trainable, opt_state, metrics)."""
+    act_spec = shd.activation_spec(mesh, "seq" if act_mode == "sp"
+                                   else act_mode)
+
+    def act_fn(h):
+        return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, act_spec))
+
+    inner_act_fn = None
+    if act_mode == "sp":
+        # Megatron-SP: gather the sequence dim for attention/FFN compute
+        full_spec = shd.activation_spec(mesh, "batch")
+
+        def inner_act_fn(h):
+            return jax.lax.with_sharding_constraint(
+                h, NamedSharding(mesh, full_spec))
+
+    moe_shard_fns = None
+    if cfg.moe.enabled and num_groups >= _data_size(mesh) > 1:
+        moe_shard_fns = _moe_shard_fns(mesh)
+
+    def step(params, trainable, opt_state, tokens, labels, mask):
+        B = tokens.shape[0]
+        S = tokens.shape[1]
+        mb = B // n_micro
+        baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        b_ok = mb % _data_size(mesh) == 0
+        tok_extra = tokens.shape[2:]
+
+        def resh(t, extra):
+            t = t.reshape((n_micro, mb) + t.shape[1:])
+            spec = P(None, baxes if b_ok else None,
+                     *([None] * (1 + len(extra))))
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, spec))
+
+        toks = resh(tokens, tok_extra)
+        labs = resh(labels, tok_extra)
+        msk = resh(mask, ())
+
+        def loss_fn(tr, mtok, mlab, mmask):
+            return model_lib.lm_loss(
+                cfg, params, mtok, mlab, mmask, trainable=tr, k=k,
+                remat=remat, remat_chunk=remat_chunk,
+                num_groups=num_groups, act_fn=act_fn,
+                inner_act_fn=inner_act_fn,
+                moe_shard_fns=moe_shard_fns)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def micro(carry, mbatch):
+            g_acc, c_acc, l_acc = carry
+            (loss, counts), grads = grad_fn(trainable, *mbatch)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                 g_acc, grads)
+            c_acc = jax.tree.map(lambda a, c: a + c, c_acc, counts)
+            return (g_acc, c_acc, l_acc + loss), None
+
+        g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                          trainable)
+        n_periods = cfg.num_layers // cfg.pattern_period
+        c0 = {f"pos{pos}": jnp.zeros((n_periods, cfg.moe.num_experts),
+                                     jnp.float32)
+              for pos in range(cfg.pattern_period)
+              if cfg.layer_is_moe(pos)}
+        (grads, counts, loss_sum), _ = jax.lax.scan(
+            micro, (g0, c0, jnp.zeros((), jnp.float32)), (toks, labs, msk))
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        if not rescaler_trainable and "rescaler" in grads:
+            grads = dict(grads)
+            grads["rescaler"] = jax.tree.map(jnp.zeros_like,
+                                             grads["rescaler"])
+
+        new_trainable, new_opt = adam.update(
+            grads, opt_state, trainable, lr=tc.learning_rate,
+            beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+        metrics = {"loss": loss_sum / n_micro, "counts": counts,
+                   "tokens": jnp.asarray(np.prod(tokens.shape[:2]),
+                                         jnp.float32)}
+        return new_trainable, new_opt, metrics
+
+    return step
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                k: Optional[int] = None, tc: Optional[TrainConfig] = None,
+                n_micro: Optional[int] = None, act_mode: Optional[str] = None,
+                num_groups: Optional[int] = None, remat_chunk: Optional[int] = None,
+                remat: bool = True) -> StepBundle:
+    tc = tc or TrainConfig()
+    knobs = choose_train_knobs(cfg, shape, mesh)
+    n_micro = n_micro if n_micro is not None else knobs["n_micro"]
+    act_mode = act_mode if act_mode is not None else knobs["act_mode"]
+    remat_chunk = (remat_chunk if remat_chunk is not None
+                   else knobs.get("remat_chunk", 0))
+    num_groups = (num_groups if num_groups is not None else
+                  choose_num_groups(cfg, shape.global_batch // n_micro,
+                                    shape.seq_len, mesh))
+    k = k if k is not None else (cfg.moe.top_k or None)
+
+    a_params = specs_lib.abstract_params(cfg)
+    a_train = specs_lib.abstract_trainable(cfg, k or 0)
+    a_opt = specs_lib.abstract_opt_state(a_train)
+    inputs = specs_lib.input_specs(cfg, shape)
+
+    p_spec = shd.param_specs(cfg, a_params, mesh)
+    t_spec = shd.trainable_specs(cfg, a_train, mesh)
+    o_spec = adam.AdamState(step=P(), mu=t_spec,
+                            nu=jax.tree.map(lambda s: s, t_spec))
+    in_b = shd.batch_spec(shape.global_batch, mesh,
+                          extra_dims=len(inputs["tokens"].shape) - 1)
+    m_b = shd.batch_spec(shape.global_batch, mesh, extra_dims=1)
+
+    step = make_train_step(cfg, mesh, k=k, tc=tc, n_micro=n_micro,
+                           act_mode=act_mode, num_groups=num_groups,
+                           remat=remat, remat_chunk=remat_chunk)
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.shardings(mesh, p_spec),
+                      shd.shardings(mesh, t_spec),
+                      shd.shardings(mesh, o_spec),
+                      NamedSharding(mesh, in_b), NamedSharding(mesh, in_b),
+                      NamedSharding(mesh, m_b)),
+        out_shardings=(shd.shardings(mesh, t_spec),
+                       shd.shardings(mesh, o_spec),
+                       None),
+        donate_argnums=(1, 2),
+    )
+    args = (a_params, a_train, a_opt,
+            inputs["tokens"], inputs["labels"], inputs["mask"])
+    return StepBundle(
+        name="train_step", fn=jitted, args=args,
+        meta={"n_micro": n_micro, "act_mode": act_mode,
+              "num_groups": num_groups, "k": k, "remat": remat,
+              "remat_chunk": remat_chunk,
+              "param_bytes": specs_lib.state_bytes(a_params),
+              "trainable_bytes": specs_lib.state_bytes(a_train)})
+
+
+# --------------------------------------------------------------------------
+# prefill step
+# --------------------------------------------------------------------------
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                  k: Optional[int] = None,
+                  num_groups: Optional[int] = None,
+                  act_mode: str = "batch") -> StepBundle:
+    k = k if k is not None else (cfg.moe.top_k or None)
+    num_groups = (num_groups if num_groups is not None else
+                  choose_num_groups(cfg, shape.global_batch, shape.seq_len,
+                                    mesh))
+    a_params = specs_lib.abstract_params(cfg)
+    a_train = specs_lib.abstract_trainable(cfg, k or 0)
+    inputs = specs_lib.input_specs(cfg, shape)
+    a_cache = specs_lib.abstract_cache(cfg, shape.global_batch,
+                                       shape.seq_len)
+
+    p_spec = shd.param_specs(cfg, a_params, mesh)
+    t_spec = shd.trainable_specs(cfg, a_train, mesh)
+    c_spec = shd.cache_specs(cfg, a_cache, mesh, shape.global_batch)
+    in_b = shd.batch_spec(shape.global_batch, mesh,
+                          extra_dims=len(inputs["tokens"].shape) - 1)
+    act_spec = shd.activation_spec(mesh, act_mode)
+
+    def act_fn(h):
+        return jax.lax.with_sharding_constraint(
+            h, NamedSharding(mesh, act_spec))
+
+    def step(params, trainable, tokens):
+        return model_lib.prefill(cfg, params, tokens, trainable=trainable,
+                                 k=k, num_groups=num_groups, act_fn=act_fn)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.shardings(mesh, p_spec),
+                      shd.shardings(mesh, t_spec),
+                      NamedSharding(mesh, in_b)),
+        out_shardings=(None, shd.shardings(mesh, c_spec)),
+    )
+    return StepBundle(
+        name="prefill_step", fn=jitted,
+        args=(a_params, a_train, inputs["tokens"]),
+        meta={"num_groups": num_groups, "k": k,
+              "cache_bytes": specs_lib.state_bytes(a_cache),
+              "param_bytes": specs_lib.state_bytes(a_params)})
+
+
+# --------------------------------------------------------------------------
+# serve (decode) step
+# --------------------------------------------------------------------------
+
+def build_serve(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                k: Optional[int] = None) -> StepBundle:
+    """ONE new token with a ``seq_len``-deep KV/state cache."""
+    k = k if k is not None else (cfg.moe.top_k or None)
+    a_params = specs_lib.abstract_params(cfg)
+    a_train = specs_lib.abstract_trainable(cfg, k or 0)
+    inputs = specs_lib.input_specs(cfg, shape)
+    a_cache = specs_lib.abstract_cache(cfg, shape.global_batch,
+                                       shape.seq_len)
+
+    p_spec = shd.param_specs(cfg, a_params, mesh)
+    t_spec = shd.trainable_specs(cfg, a_train, mesh)
+    c_spec = shd.cache_specs(cfg, a_cache, mesh, shape.global_batch)
+    in_b = shd.batch_spec(shape.global_batch, mesh,
+                          extra_dims=len(inputs["tokens"].shape) - 1)
+
+    def step(params, trainable, cache, tokens, pos):
+        return model_lib.decode_step(cfg, params, cache, tokens, pos,
+                                     trainable=trainable, k=k)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(shd.shardings(mesh, p_spec),
+                      shd.shardings(mesh, t_spec),
+                      shd.shardings(mesh, c_spec),
+                      NamedSharding(mesh, in_b),
+                      NamedSharding(mesh, P())),
+        out_shardings=(None, shd.shardings(mesh, c_spec)),
+        donate_argnums=(2,),            # cache updates in place
+    )
+    return StepBundle(
+        name="serve_step", fn=jitted,
+        args=(a_params, a_train, a_cache, inputs["tokens"], inputs["pos"]),
+        meta={"k": k, "cache_bytes": specs_lib.state_bytes(a_cache),
+              "param_bytes": specs_lib.state_bytes(a_params)})
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               **overrides) -> StepBundle:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, **overrides)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, **overrides)
+    return build_serve(cfg, shape, mesh, **overrides)

@@ -1,0 +1,263 @@
+"""Attention: GQA with RoPE, optional qk-norm, full-causal or sliding-window.
+
+Two execution paths:
+  * ``flash_attention_jnp`` — blockwise online-softmax attention written with
+    ``lax.scan`` so no (S, S) score tensor is ever materialised.  This is the
+    path used under jit/GSPMD (it lowers cleanly for the multi-pod dry-run)
+    and the CPU oracle for the Pallas kernel.
+  * ``repro.kernels.flash_attention`` — the Pallas TPU kernel (same math).
+
+Sliding-window attention fetches only the KV span each query block can see
+(``lax.dynamic_slice``), making long-context prefill genuinely sub-quadratic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, lora_dense, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> dict:
+    from .layers import dense_init
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# blockwise flash attention (jnp path)
+# --------------------------------------------------------------------------
+
+def _pick_block(seq_len: int, target: int = 512) -> int:
+    b = min(target, seq_len)
+    while seq_len % b:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_attention_jnp(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        logit_softcap: float = 0.0,
+                        block_q: int = 512, block_k: int = 512) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,S,KV,D).  Returns (B,S,H,D).
+
+    GQA is handled by reshaping query heads into (KV, rep) groups.  Online
+    softmax runs in fp32.  ``window > 0`` limits each query to the previous
+    ``window`` positions (inclusive of itself) and restricts the scanned KV
+    span accordingly.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(S, block_k)
+    nq = S // bq
+    scale = jnp.asarray(D ** -0.5, jnp.float32)
+
+    # (B, nq, bq, KV, rep, D) query blocks
+    qb = q.reshape(B, nq, bq, KV, rep, D)
+
+    if window > 0:
+        # Each query block sees span [blk_start - window_pad, blk_end): a
+        # static-width slice of K/V, fetched with dynamic_slice.
+        span = ((window + bk - 1) // bk) * bk + bq
+        span = min(span, S)
+
+        def per_qblock(i, qblk):
+            start = jnp.maximum(i * bq + bq - span, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kpos = start + jnp.arange(span)
+            qpos = i * bq + jnp.arange(bq)
+            return _attend_block(qblk, ks, vs, qpos, kpos, scale,
+                                 causal=True, window=window,
+                                 logit_softcap=logit_softcap)
+
+        out = jax.lax.map(lambda args: per_qblock(*args),
+                          (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1)          # (B, nq, bq, KV, rep, D)
+        return out.reshape(B, S, H, D)
+
+    # full causal: scan over kv blocks with online softmax
+    nk = S // bk
+    kb = k.reshape(B, nk, bk, KV, D)
+    vb = v.reshape(B, nk, bk, KV, D)
+
+    def per_qblock(i, qblk):
+        # qblk: (B, bq, KV, rep, D)
+        qpos = i * bq + jnp.arange(bq)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            j, kblk, vblk = inputs           # (B, bk, KV, D)
+            kpos = j * bk + jnp.arange(bk)
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            s = softcap(s, logit_softcap)
+            mask = qpos[:, None] >= kpos[None, :] if causal else None
+            if mask is not None:
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkrqs,bskd->bkrqd", p,
+                            vblk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, rep, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, rep, bq, D) -> (B, bq, KV, rep, D)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    out = jax.lax.map(lambda args: per_qblock(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def _attend_block(qblk, ks, vs, qpos, kpos, scale, *, causal, window,
+                  logit_softcap):
+    """Single query block vs a contiguous KV span (used by the SWA path).
+
+    qblk: (B, bq, KV, rep, D); ks/vs: (B, span, KV, D).
+    """
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qblk.astype(jnp.float32),
+                   ks.astype(jnp.float32)) * scale
+    s = softcap(s, logit_softcap)
+    valid = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        valid &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bkrqd", p, vs.astype(jnp.float32))
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(qblk.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode-time attention against a KV cache
+# --------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray,
+                     *, window: int = 0,
+                     logit_softcap: float = 0.0) -> jnp.ndarray:
+    """One-token attention.  q: (B,1,H,D); caches: (B,Sc,KV,D).
+
+    ``pos`` is the absolute position of the current token.  For a ring
+    (sliding-window) cache every slot is valid once the ring has wrapped;
+    for a linear cache only slots ``<= pos`` are valid.
+    """
+    B, Sc, KV, D = k_cache.shape
+    H = q.shape[2]
+    rep = H // KV
+    scale = jnp.asarray(D ** -0.5, jnp.float32)
+    qh = q.reshape(B, KV, rep, D)
+
+    s = jnp.einsum("bkrd,bskd->bkrs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = softcap(s, logit_softcap)
+    idx = jnp.arange(Sc)
+    if window > 0:
+        # ring cache of size Sc == window: slot valid iff it has been written
+        n_valid = jnp.minimum(pos + 1, Sc)
+        valid = idx < n_valid
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# full attention sub-layer (projections + rope + attention + output)
+# --------------------------------------------------------------------------
+
+def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                    *, lora: Optional[dict] = None, lora_scale: float = 0.0,
+                    cache: Optional[dict] = None,
+                    cache_pos: Optional[jnp.ndarray] = None,
+                    return_cache: bool = False):
+    """x: (B,S,D_model).  Training/prefill when ``cache`` is None or being
+    built; decode (S==1) when ``cache`` holds the K/V ring.
+
+    Returns (out, new_cache) where new_cache is None unless requested.
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    lg = lora or {}
+
+    q = lora_dense(x, p["wq"], lg.get("wq"), lora_scale)
+    k = lora_dense(x, p["wk"], lg.get("wk"), lora_scale)
+    v = lora_dense(x, p["wv"], lg.get("wv"), lora_scale)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.rms_eps)
+        k = rms_norm(p["k_norm"], k, cfg.rms_eps)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None and S == 1:
+        # decode: write this token's K/V into the ring/linear cache
+        Sc = cache["k"].shape[1]
+        slot = cache_pos % Sc if cfg.attention_window > 0 else cache_pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        out = decode_attention(q, k_cache, v_cache, cache_pos,
+                               window=cfg.attention_window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        out = flash_attention_jnp(
+            q, k, v, causal=True, window=cfg.attention_window,
+            logit_softcap=cfg.attn_logit_softcap)
+        if return_cache:
+            w = cfg.attention_window
+            if w > 0 and S >= w:
+                # ring cache: token t lives at slot t % w — roll so the
+                # last w tokens land on their ring slots and subsequent
+                # decode writes overwrite the oldest entry
+                kc, vc = k[:, S - w:], v[:, S - w:]
+                shift = S % w
+                if shift:
+                    kc = jnp.roll(kc, shift, axis=1)
+                    vc = jnp.roll(vc, shift, axis=1)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = {"k": k, "v": v}
+
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    out = lora_dense(out, p["wo"], lg.get("wo"), lora_scale)
+    return out, new_cache

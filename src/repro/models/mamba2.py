@@ -1,0 +1,267 @@
+"""Mamba-2 block (State-Space Duality, arXiv:2405.21060), pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (quadratic *within* a chunk,
+linear across chunks — ``lax.scan`` carries the inter-chunk state), decode is
+the O(1) recurrent update.  Heads are fully independent, so the ``model``
+mesh axis shards the head dimension and the scan stays shard-local.
+
+State caches (the SSM analogue of a KV cache):
+  ``conv``  (B, conv_dim, conv_width-1) — rolling depthwise-conv context
+  ``ssm``   (B, H, P, N)                — recurrent state
+Both are O(1) in sequence length — this is why the SSM/hybrid architectures
+run the 500k-token decode shape natively.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, gated_rms_norm, lora_dense
+
+
+# --------------------------------------------------------------------------
+# dimensions
+# --------------------------------------------------------------------------
+
+def mamba_dims(cfg) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim,
+                d_state=s.d_state, head_dim=s.head_dim,
+                n_groups=s.n_groups, conv_width=s.conv_width,
+                in_dim=2 * d_inner + 2 * s.n_groups * s.d_state + n_heads)
+
+
+def init_mamba(key, cfg) -> dict:
+    dims = mamba_dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # dt bias init: softplus^-1 of dt ~ U[1e-3, 1e-1] (mamba default)
+    dt = jnp.exp(jax.random.uniform(k3, (dims["n_heads"],), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a_init = jax.random.uniform(k4, (dims["n_heads"],), jnp.float32, 1.0, 16.0)
+    return {
+        "in_proj": dense_init(k1, (cfg.d_model, dims["in_dim"]), dtype),
+        "conv_w": (jax.random.normal(k2, (dims["conv_dim"],
+                                          dims["conv_width"]), jnp.float32)
+                   * (dims["conv_width"] ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((dims["conv_dim"],), dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((dims["n_heads"],), jnp.float32),
+        "norm": jnp.ones((dims["d_inner"],), dtype),
+        "out_proj": dense_init(jax.random.fold_in(k1, 7),
+                               (dims["d_inner"], cfg.d_model), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# chunked SSD scan
+# --------------------------------------------------------------------------
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., L) -> (..., L, L) with out[i, j] = sum_{k=j+1..i} x[k] for
+    j <= i, -inf above the diagonal."""
+    L = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD forward.  Shapes:
+      x  (B, S, H, P)   head inputs
+      dt (B, S, H)      positive step sizes
+      A  (H,)           negative decay rates
+      Bm (B, S, H, N)   input gates  (already broadcast group->head)
+      Cm (B, S, H, N)   output gates
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  All math in fp32.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+
+    f32 = jnp.float32
+    x, dt, Bm, Cm = (t.astype(f32) for t in (x, dt, Bm, Cm))
+    A = A.astype(f32)
+
+    def reshape_c(t):
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = map(reshape_c, (x, dt, Bm, Cm))   # (B,nc,L,...)
+    dA = dtc * A[None, None, None, :]                   # (B,nc,L,H)
+    dA = jnp.moveaxis(dA, -1, 2)                        # (B,nc,H,L)
+    dA_cs = jnp.cumsum(dA, axis=-1)                     # (B,nc,H,L)
+    dtx = xc * dtc[..., None]                           # (B,nc,L,H,P)
+
+    # intra-chunk (diagonal blocks)
+    Ldec = jnp.exp(_segsum(dA))                         # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        Cc, Bc, Ldec, dtx)
+
+    # per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)     # (B,nc,H,L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_states, dtx)
+
+    # inter-chunk recurrence: prev[c] = running state before chunk c
+    chunk_decay = jnp.exp(dA_cs[..., -1])               # (B,nc,H)
+    init = (jnp.zeros((Bsz, H, P, N), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def step(carry, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        prev = carry
+        new = st + dec[..., None, None] * prev
+        return new, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # contribution of carried-in state to each position
+    state_decay = jnp.exp(dA_cs)                        # (B,nc,H,L)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv
+# --------------------------------------------------------------------------
+
+def causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None):
+    """xbc: (B, S, C); w: (C, W).  Left-pads with ``state`` (B, C, W-1) or
+    zeros.  Returns (out (B,S,C), new_state (B,C,W-1))."""
+    Bsz, S, C = xbc.shape
+    W = w.shape[-1]
+    xt = jnp.moveaxis(xbc, 1, 2)                        # (B, C, S)
+    pad = (jnp.zeros((Bsz, C, W - 1), xbc.dtype) if state is None
+           else state.astype(xbc.dtype))
+    xp = jnp.concatenate([pad, xt], axis=-1)            # (B, C, S+W-1)
+    out = jnp.zeros((Bsz, C, S), jnp.float32)
+    for i in range(W):
+        out = out + (xp[:, :, i:i + S].astype(jnp.float32)
+                     * w[:, i].astype(jnp.float32)[None, :, None])
+    out = out + b.astype(jnp.float32)[None, :, None]
+    new_state = xp[:, :, S:]                            # last W-1 inputs
+    return jnp.moveaxis(out, 1, 2).astype(xbc.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# full block
+# --------------------------------------------------------------------------
+
+def _split_in_proj(z_xbc_dt, dims):
+    d_inner, conv_dim, H = dims["d_inner"], dims["conv_dim"], dims["n_heads"]
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner:d_inner + conv_dim]
+    dt = z_xbc_dt[..., d_inner + conv_dim:]
+    assert dt.shape[-1] == H
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, dims):
+    d_inner, G, N = dims["d_inner"], dims["n_groups"], dims["d_state"]
+    x = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner:d_inner + G * N]
+    Cm = xbc[..., d_inner + G * N:]
+    return x, Bm, Cm
+
+
+def _broadcast_groups(t, dims):
+    """(B, S, G*N) -> (B, S, H, N) by repeating groups across heads."""
+    Bsz, S = t.shape[:2]
+    G, N, H = dims["n_groups"], dims["d_state"], dims["n_heads"]
+    t = t.reshape(Bsz, S, G, N)
+    return jnp.repeat(t, H // G, axis=2)
+
+
+def apply_mamba(p: dict, cfg, x: jnp.ndarray,
+                *, lora: Optional[dict] = None, lora_scale: float = 0.0,
+                cache: Optional[dict] = None,
+                return_cache: bool = False):
+    """x: (B, S, D).  Prefill/train when cache is None (or being built),
+    decode single-step when ``cache`` holds {conv, ssm} and S == 1."""
+    dims = mamba_dims(cfg)
+    Bsz, S, _ = x.shape
+    lg = lora or {}
+    H, P, N = dims["n_heads"], dims["head_dim"], dims["d_state"]
+
+    zxbcdt = lora_dense(x, p["in_proj"], lg.get("in_proj"), lora_scale)
+    z, xbc, dt = _split_in_proj(zxbcdt, dims)
+
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    new_cache = None
+
+    if cache is not None and S == 1:
+        # ---- recurrent decode ----
+        xbc_full = jnp.concatenate(
+            [cache["conv"], jnp.moveaxis(xbc, 1, 2)], axis=-1)   # (B,C,W)
+        conv_out = (xbc_full.astype(jnp.float32)
+                    * p["conv_w"].astype(jnp.float32)[None]).sum(-1)
+        conv_out = conv_out + p["conv_b"].astype(jnp.float32)[None]
+        xbc_t = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)  # (B,1,C)
+        new_conv = xbc_full[:, :, 1:]
+
+        xs, Bm, Cm = _split_xbc(xbc_t, dims)
+        xs = xs.reshape(Bsz, H, P)
+        Bm = _broadcast_groups(Bm, dims)[:, 0]                   # (B,H,N)
+        Cm = _broadcast_groups(Cm, dims)[:, 0]
+        dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + p["dt_bias"][None])              # (B,H)
+        dA = jnp.exp(dtp * A[None])                              # (B,H)
+        dtx = xs.astype(jnp.float32) * dtp[..., None]            # (B,H,P)
+        new_ssm = (cache["ssm"].astype(jnp.float32) * dA[..., None, None]
+                   + jnp.einsum("bhp,bhn->bhpn", dtx,
+                                Bm.astype(jnp.float32)))
+        y = jnp.einsum("bhn,bhpn->bhp", Cm.astype(jnp.float32), new_ssm)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bsz, 1, dims["d_inner"]).astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        # ---- chunked SSD prefill/train ----
+        conv_in_state = cache["conv"] if cache is not None else None
+        xbc_c, conv_state = causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                        conv_in_state)
+        xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(x.dtype)
+        xs, Bm, Cm = _split_xbc(xbc_c, dims)
+        xs = xs.reshape(Bsz, S, H, P)
+        Bm = _broadcast_groups(Bm, dims)
+        Cm = _broadcast_groups(Cm, dims)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        chunk = min(cfg.ssm.chunk_size, S)
+        while S % chunk:                       # largest divisor ≤ chunk_size
+            chunk -= 1
+        init_state = cache["ssm"] if cache is not None else None
+        y, final_state = ssd_chunked(xs, dtp, A, Bm, Cm, chunk, init_state)
+        y = y + (p["D"].astype(jnp.float32)[None, None, :, None]
+                 * xs.astype(jnp.float32))
+        y = y.reshape(Bsz, S, dims["d_inner"]).astype(x.dtype)
+        if return_cache:
+            new_cache = {"conv": conv_state, "ssm": final_state}
+
+    y = gated_rms_norm(p["norm"], y, z, cfg.rms_eps)
+    return lora_dense(y, p["out_proj"], lg.get("out_proj"), lora_scale), new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    dims = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dims["conv_dim"], dims["conv_width"] - 1),
+                          dtype),
+        "ssm": jnp.zeros((batch, dims["n_heads"], dims["head_dim"],
+                          dims["d_state"]), jnp.float32),
+    }

@@ -1,0 +1,463 @@
+"""Unified decoder model covering all assigned families.
+
+A model is ``num_layers`` blocks; each block = mixer (attention | mamba2) +
+optional FFN (dense SwiGLU | sparse MoE).  Blocks are grouped into repeating
+*periods* (Jamba: period 8) and the stack is a ``lax.scan`` over periods so
+HLO size stays O(period), not O(depth) — essential for compiling the
+126-layer llama3-405b dry-run.
+
+Parameter tree:
+  {"embed": {"tokens": (V,D) | (K,V,D)},
+   "blocks": {"pos0": <stacked block tree, leading axis n_periods>, ...},
+   "final_norm": (D,),
+   "lm_head": (D,V) | (K,D,V)}            # absent when tie_embeddings
+
+Trainable (federated) tree:
+  {"lora": mirrors params with {"a","b"} factors on targeted matrices,
+   "rescaler": {"pos{i}": (n_periods,)}}  # FLAME s_i, MoE positions only
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba2 as ssm_mod
+from . import moe_layer as moe_mod
+from .layers import apply_ffn, embed_init, init_ffn, rms_norm
+
+PyTree = Any
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def _init_block(key, cfg, kind: str, is_moe: bool) -> dict:
+    keys = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p: dict = {"mixer_norm": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_mamba(keys[0], cfg)
+    if is_moe:
+        p["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = moe_mod.init_moe(keys[1], cfg)
+    elif cfg.d_ff > 0:
+        p["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = init_ffn(keys[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg) -> PyTree:
+    cfg.validate()
+    P = cfg.pattern_period
+    n_periods = cfg.num_layers // P
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    if cfg.num_codebooks > 0:
+        embed = embed_init(k_embed, (cfg.num_codebooks, cfg.vocab_size,
+                                     cfg.d_model), dtype)
+    else:
+        embed = embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype)
+
+    blocks = {}
+    for pos in range(P):
+        kind = cfg.layer_kind(pos)
+        is_moe = cfg.layer_is_moe(pos)
+        kp = jax.random.fold_in(k_blocks, pos)
+        stacked = jax.vmap(
+            lambda k: _init_block(k, cfg, kind, is_moe)
+        )(jax.random.split(kp, n_periods))
+        blocks[f"pos{pos}"] = stacked
+
+    params = {
+        "embed": {"tokens": embed},
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 0:
+            params["lm_head"] = embed_init(
+                k_head, (cfg.num_codebooks, cfg.d_model, cfg.vocab_size), dtype)
+        else:
+            params["lm_head"] = embed_init(
+                k_head, (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+# ==========================================================================
+# embedding / head
+# ==========================================================================
+
+def embed_tokens(params, cfg, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = params["embed"]["tokens"]
+    if cfg.num_codebooks > 0:
+        # tokens: (B, S, K); sum of per-codebook embeddings (MusicGen style)
+        parts = [jnp.take(emb[k], tokens[..., k], axis=0)
+                 for k in range(cfg.num_codebooks)]
+        return sum(parts)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def lm_head(params, cfg, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embed"]["tokens"]
+        if cfg.num_codebooks > 0:
+            return jnp.einsum("bsd,kvd->bskv", h, w)
+        return h @ w.T
+    w = params["lm_head"]
+    if cfg.num_codebooks > 0:
+        return jnp.einsum("bsd,kdv->bskv", h, w)
+    return h @ w
+
+
+# ==========================================================================
+# one block
+# ==========================================================================
+
+def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
+                 positions, *, lora, rescaler, lora_scale, k,
+                 cache=None, cache_pos=None, return_cache=False,
+                 deterministic=True, num_groups=1, inner_act_fn=None,
+                 outer_act_fn=None, moe_shard_fns=None):
+    def _reshard(t):
+        # force the residual add's output back to the between-block
+        # sharding so GSPMD lowers the partial-sum as a reduce-scatter
+        # instead of all-reduce + re-gather
+        return outer_act_fn(t) if outer_act_fn is not None else t
+    lg = lora or {}
+    new_cache = {}
+    h = rms_norm(p["mixer_norm"], x, cfg.rms_eps)
+    if inner_act_fn is not None:
+        # Megatron-SP: the residual stream is sequence-sharded between
+        # blocks; gather S here so attention/FFN see the full sequence
+        # (GSPMD emits all-gather on entry + reduce-scatter at the
+        # residual add — same bytes as the TP all-reduce, but the saved
+        # carry is 1/TP the size)
+        h = inner_act_fn(h)
+    if kind == "attn":
+        h, mc = attn_mod.apply_attention(
+            p["attn"], cfg, h, positions, lora=lg.get("attn"),
+            lora_scale=lora_scale,
+            cache=(cache or {}).get("attn"), cache_pos=cache_pos,
+            return_cache=return_cache)
+        if mc is not None:
+            new_cache["attn"] = mc
+    else:
+        h, mc = ssm_mod.apply_mamba(
+            p["ssm"], cfg, h, lora=lg.get("ssm"), lora_scale=lora_scale,
+            cache=(cache or {}).get("ssm"), return_cache=return_cache)
+        if mc is not None:
+            new_cache["ssm"] = mc
+    x = _reshard(x + h)
+
+    aux = None
+    if is_moe:
+        h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
+        if inner_act_fn is not None:
+            h2 = inner_act_fn(h2)
+        h2, aux = moe_mod.apply_moe(
+            p["moe"], cfg, h2, k=k, rescaler=rescaler,
+            lora=lg.get("moe"), lora_scale=lora_scale,
+            deterministic=deterministic, num_groups=num_groups,
+            shard_fns=moe_shard_fns)
+        x = _reshard(x + h2)
+    elif cfg.d_ff > 0:
+        h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
+        if inner_act_fn is not None:
+            h2 = inner_act_fn(h2)
+        h2 = apply_ffn(p["ffn"], h2, lg.get("ffn"), lora_scale)
+        x = _reshard(x + h2)
+    return x, aux, (new_cache if new_cache else None)
+
+
+# ==========================================================================
+# forward over the full stack (scan over periods)
+# ==========================================================================
+
+def _stack_scan(cfg, params, x, positions, *, trainable, k,
+                cache=None, cache_pos=None, return_cache=False,
+                remat=False, remat_chunk=0, deterministic=True,
+                num_groups=1, act_fn=None, inner_act_fn=None,
+                moe_shard_fns=None):
+    P = cfg.pattern_period
+    trainable = trainable or {}
+    lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
+    rescalers = trainable.get("rescaler") or {}
+    lora_scale = cfg.lora.scale if cfg.lora.enabled else 0.0
+    k = k if k is not None else cfg.moe.top_k
+
+    xs = {"params": params["blocks"]}
+    if lora_blocks:
+        xs["lora"] = lora_blocks
+    if rescalers:
+        xs["rescaler"] = rescalers
+
+    # Decode path: thread the cache through the scan CARRY (updated with
+    # dynamic_update_index per period) instead of xs→ys.  While-loop carry
+    # buffers alias in place; xs→ys would double-buffer the whole cache —
+    # measured +20 GB/device on llama3-405b × decode_32k (EXPERIMENTS.md
+    # §Perf H3).
+    carry_cache = cache is not None and return_cache
+    if cache is not None and not carry_cache:
+        xs["cache"] = cache
+
+    def body(h, sl):
+        if act_fn is not None:
+            # sharding constraint on the residual stream (= the remat'd
+            # scan carry, i.e. the saved-activation footprint)
+            h = act_fn(h)
+        counts = {}
+        new_caches = {}
+        for pos in range(P):
+            key = f"pos{pos}"
+            kind = cfg.layer_kind(pos)
+            is_moe = cfg.layer_is_moe(pos)
+            r = sl.get("rescaler", {}).get(key)
+            h, aux, nc = _apply_block(
+                cfg, kind, is_moe, sl["params"][key], h, positions,
+                lora=sl.get("lora", {}).get(key),
+                rescaler=r, lora_scale=lora_scale, k=k,
+                cache=(sl.get("cache") or {}).get(key),
+                cache_pos=cache_pos, return_cache=return_cache,
+                deterministic=deterministic, num_groups=num_groups,
+                inner_act_fn=inner_act_fn,
+                outer_act_fn=act_fn if inner_act_fn is not None else None,
+                moe_shard_fns=moe_shard_fns)
+            if aux is not None:
+                counts[key] = aux.activation_counts
+            if nc is not None:
+                new_caches[key] = nc
+        ys = {}
+        if counts:
+            ys["counts"] = counts
+        if new_caches:
+            ys["cache"] = new_caches
+        return h, ys
+
+    n_periods = cfg.num_layers // P
+    if carry_cache:
+        def body_cc(carry, sl):
+            h, cache_c = carry
+            i = sl["idx"]
+            cache_slice = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                       keepdims=False),
+                cache_c)
+            sl2 = {k2: v for k2, v in sl.items() if k2 != "idx"}
+            sl2["cache"] = cache_slice
+            h, ys = body(h, sl2)
+            nc = ys.pop("cache")
+            cache_c = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cache_c, nc)
+            return (h, cache_c), ys
+
+        xs_cc = dict(xs)
+        xs_cc["idx"] = jnp.arange(n_periods)
+        (h, new_cache), ys = jax.lax.scan(body_cc, (x, cache), xs_cc)
+        ys = dict(ys)
+        ys["cache"] = new_cache
+        return h, ys
+
+    if (remat and remat_chunk and 1 < remat_chunk < n_periods
+            and cache is None and not return_cache):
+        # two-level (√L) checkpointing: scan over groups of periods, remat
+        # at both levels — saved residuals drop from n_periods·|h| to
+        # (n_outer + chunk)·|h| at the cost of one extra re-forward.
+        # This is what lets llama3-405b train with UNSHARDED activations
+        # (no per-matmul activation collectives) — see EXPERIMENTS.md §Perf.
+        g = remat_chunk
+        while n_periods % g:
+            g -= 1
+        n_outer = n_periods // g
+        xs2 = jax.tree.map(
+            lambda t: t.reshape((n_outer, g) + t.shape[1:]), xs)
+        inner = jax.checkpoint(body, prevent_cse=False)
+
+        def outer_body(h, sl):
+            return jax.lax.scan(inner, h, sl)
+
+        outer = jax.checkpoint(outer_body, prevent_cse=False)
+        h, ys = jax.lax.scan(outer, x, xs2)
+        ys = jax.tree.map(
+            lambda t: t.reshape((n_periods,) + t.shape[2:]), ys)
+        return h, ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    h, ys = jax.lax.scan(body, x, xs)
+    return h, ys
+
+
+def forward_hidden(cfg, params, tokens, *, trainable=None, k=None,
+                   positions=None, remat=False, remat_chunk=0,
+                   deterministic=True, num_groups=1, act_fn=None,
+                   inner_act_fn=None, moe_shard_fns=None):
+    """tokens -> final hidden states (pre-head).  Returns (h, aux)."""
+    B, S = tokens.shape[:2]
+    if positions is None:
+        positions = jnp.arange(S)
+    x = embed_tokens(params, cfg, tokens)
+    h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable, k=k,
+                        remat=remat, remat_chunk=remat_chunk,
+                        deterministic=deterministic,
+                        num_groups=num_groups, act_fn=act_fn,
+                        inner_act_fn=inner_act_fn,
+                        moe_shard_fns=moe_shard_fns)
+    h = rms_norm(params["final_norm"], h, cfg.rms_eps)
+    return h, ys.get("counts", {})
+
+
+def forward(cfg, params, tokens, *, trainable=None, k=None, positions=None,
+            remat=False, deterministic=True, num_groups=1, act_fn=None):
+    """tokens -> logits.  Returns (logits, activation_counts)."""
+    h, counts = forward_hidden(cfg, params, tokens, trainable=trainable,
+                               k=k, positions=positions, remat=remat,
+                               deterministic=deterministic,
+                               num_groups=num_groups, act_fn=act_fn)
+    return lm_head(params, cfg, h), counts
+
+
+# ==========================================================================
+# loss (seq-chunked cross-entropy so (B,S,V) logits never materialise)
+# ==========================================================================
+
+def chunked_ce_loss(cfg, params, h: jnp.ndarray, labels: jnp.ndarray,
+                    mask: Optional[jnp.ndarray] = None,
+                    chunk: int = 512) -> jnp.ndarray:
+    """h: (B,S,D); labels: (B,S) or (B,S,K); mask: (B,S) 0/1."""
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape((B, nc, chunk) + labels.shape[2:]), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hh, ll, mm = inp
+        logits = lm_head(params, cfg, hh).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = lse - gold                       # (B,chunk[,K])
+        if nll.ndim == 3:                      # audio codebooks: mean over K
+            nll = nll.mean(-1)
+        tot = tot + (nll * mm).sum()
+        cnt = cnt + mm.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg, params, tokens, labels, mask=None, *, trainable=None,
+            k=None, remat=False, remat_chunk=0, num_groups=1, act_fn=None,
+            inner_act_fn=None, moe_shard_fns=None):
+    """Full LM loss.  Returns (loss, activation_counts)."""
+    h, counts = forward_hidden(cfg, params, tokens, trainable=trainable,
+                               k=k, remat=remat, remat_chunk=remat_chunk,
+                               deterministic=True,
+                               num_groups=num_groups, act_fn=act_fn,
+                               inner_act_fn=inner_act_fn,
+                               moe_shard_fns=moe_shard_fns)
+    return chunked_ce_loss(cfg, params, h, labels, mask), counts
+
+
+# ==========================================================================
+# decode path
+# ==========================================================================
+
+def cache_len_for(cfg, seq_len: int) -> int:
+    if cfg.attention_window > 0:
+        return min(cfg.attention_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int) -> PyTree:
+    """Zeroed decode cache for the whole stack (leading axis n_periods)."""
+    P = cfg.pattern_period
+    n_periods = cfg.num_layers // P
+    dtype = jnp.dtype(cfg.dtype)
+    clen = cache_len_for(cfg, seq_len)
+    cache = {}
+    for pos in range(P):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            hd = cfg.head_dim_
+            c = {"attn": {
+                "k": jnp.zeros((n_periods, batch, clen, cfg.n_kv_heads, hd),
+                               dtype),
+                "v": jnp.zeros((n_periods, batch, clen, cfg.n_kv_heads, hd),
+                               dtype),
+            }}
+        else:
+            base = ssm_mod.init_mamba_cache(cfg, batch)
+            c = {"ssm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n_periods,) + t.shape), base)}
+        cache[f"pos{pos}"] = c
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
+                num_groups=1):
+    """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int.
+    Returns (logits (B,1,V[,K]), new_cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable, k=k,
+                        cache=cache, cache_pos=pos, return_cache=True,
+                        num_groups=num_groups)
+    h = rms_norm(params["final_norm"], h, cfg.rms_eps)
+    return lm_head(params, cfg, h), ys["cache"]
+
+
+def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
+            act_fn=None, cache_len=None):
+    """Forward pass that also builds the decode cache.
+    Returns (logits_last (B,1,V[,K]), cache).
+
+    ``cache_len``: total decode capacity; attention K/V caches are
+    zero-padded from the prompt length up to ``cache_len_for(cfg,
+    cache_len)`` so decode_step can write new tokens in place (the padded
+    slots are masked out by ``idx <= pos`` until written)."""
+    B, S = tokens.shape[:2]
+    positions = jnp.arange(S)
+    x = embed_tokens(params, cfg, tokens)
+    h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable,
+                        k=k, return_cache=True, num_groups=num_groups,
+                        act_fn=act_fn)
+    cache = ys["cache"]
+    target = cache_len_for(cfg, cache_len or S)
+
+    def pad_attn(c):
+        if "attn" not in c:
+            return c
+        kv = c["attn"]
+        cur = kv["k"].shape[2]              # (n_periods, B, Sc, KV, hd)
+        if cur >= target:
+            return c
+        pad = [(0, 0)] * kv["k"].ndim
+        pad[2] = (0, target - cur)
+        return {**c, "attn": {"k": jnp.pad(kv["k"], pad),
+                              "v": jnp.pad(kv["v"], pad)}}
+
+    cache = {pos: pad_attn(c) for pos, c in cache.items()}
+    h = rms_norm(params["final_norm"], h[:, -1:], cfg.rms_eps)
+    return lm_head(params, cfg, h), cache

@@ -1,0 +1,102 @@
+"""Adam(W) optimizer, pure JAX pytrees (no optax in this container).
+
+State is a pytree-of-dicts mirroring the trainable tree.  Supports
+global-norm clipping, decoupled weight decay, and an optional boolean mask
+tree (leaves with mask False are frozen — used for the "static rescaler"
+ablation where s_i = k/k_i must not train).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+
+def update(grads: PyTree, state: AdamState, params: PyTree, *,
+           lr: float, beta1: float = 0.9, beta2: float = 0.999,
+           eps: float = 1e-8, weight_decay: float = 0.0,
+           grad_clip: float = 0.0,
+           mask: Optional[PyTree] = None) -> Tuple[PyTree, AdamState]:
+    """Returns (new_params, new_state)."""
+    if grad_clip > 0:
+        grads = clip_by_global_norm(grads, grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(g, m, v, p, use=True):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = beta1 * m + (1 - beta1) * g
+        v_new = beta2 * v + (1 - beta2) * g * g
+        delta = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if weight_decay:
+            delta = delta + lr * weight_decay * p32
+        p_new = (p32 - delta).astype(p.dtype)
+        if use is not True:  # masked leaf: freeze
+            keep = jnp.asarray(use)
+            p_new = jnp.where(keep, p_new, p)
+            m_new = jnp.where(keep, m_new, m)
+            v_new = jnp.where(keep, v_new, v)
+        return p_new, m_new, v_new
+
+    if mask is None:
+        triples = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    else:
+        triples = jax.tree.map(lambda g, m, v, p, k: upd(g, m, v, p, k),
+                               grads, state.mu, state.nu, params, mask)
+
+    new_params = jax.tree.map(lambda t3: t3[0], triples,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t3: t3[1], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t3: t3[2], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(step=step, mu=new_mu, nu=new_nu)
+
+
+# --------------------------------------------------------------------------
+# LR schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

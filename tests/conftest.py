@@ -1,0 +1,41 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS manipulation here — tests must see
+the real (single-CPU) device set; only launch/dryrun.py forces 512 devices.
+"""
+import jax
+import pytest
+
+from repro.configs.base import LoRAConfig, ModelConfig, MoEConfig, SSMConfig
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_dense(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny-dense", family="dense", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128, head_dim=16,
+        lora=LoRAConfig(rank=4), dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_moe(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny-moe", family="moe", num_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=0, vocab_size=128, head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64),
+        lora=LoRAConfig(rank=4), dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_ssm(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny-ssm", family="ssm", num_layers=2, d_model=64,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=128,
+        ssm=SSMConfig(d_state=16, head_dim=32, chunk_size=16),
+        lora=LoRAConfig(rank=4), dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)

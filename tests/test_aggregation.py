@@ -1,0 +1,130 @@
+"""Aggregation-scheme tests — the paper's §5 edge-case analysis, verified.
+
+  * t = 0       -> FLAME aggregation ≡ standard FedAvg (Eq. 3–4);
+  * zero freq   -> that client contributes NOTHING to that expert;
+  * full freq   -> dataset-size weighting (plain FedAvg weights);
+  * HLoRA       -> rank components average only over clients that trained them;
+  * FlexLoRA    -> ΔW-space FedAvg reproduced through the SVD refactor.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import lora as L
+
+E, NP, D, R = 4, 1, 8, 4        # experts, periods, dim, rank
+
+
+def _client_lora(seed):
+    key = jax.random.PRNGKey(seed)
+    return {"blocks": {"pos0": {"moe": {"experts": {
+        "w1": {"a": jax.random.normal(key, (NP, E, D, R)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (NP, E, R, D))},
+    }}, "attn": {"wq": {"a": jax.random.normal(jax.random.fold_in(key, 2),
+                                               (NP, D, R)),
+                        "b": jnp.zeros((NP, R, D))}}}}}
+
+
+def _freq(values):
+    return {"pos0": jnp.broadcast_to(jnp.asarray(values, jnp.float32),
+                                     (NP, E))}
+
+
+def test_t0_equals_fedavg():
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [10.0, 30.0]
+    freqs = [_freq([0.9, 0.1, 0.5, 0.0]), _freq([0.2, 0.8, 0.5, 1.0])]
+    flame = agg.flame_aggregate(loras, freqs, sizes, temperature=0)
+    fed = agg.fedavg(loras, sizes)
+    for a, b in zip(jax.tree.leaves(flame), jax.tree.leaves(fed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_zero_activation_contributes_nothing():
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [10.0, 10.0]
+    # client 0 never activated expert 2; client 1 always did
+    freqs = [_freq([0.5, 0.5, 0.0, 0.5]), _freq([0.5, 0.5, 1.0, 0.5])]
+    out = agg.flame_aggregate(loras, freqs, sizes, temperature=2)
+    got = out["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"][:, 2]
+    want = loras[1]["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"][:, 2]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_full_activation_reduces_to_dataset_weighting():
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [10.0, 30.0]
+    freqs = [_freq([1.0] * E), _freq([1.0] * E)]
+    out = agg.flame_aggregate(loras, freqs, sizes, temperature=4)
+    fed = agg.fedavg(loras, sizes)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(fed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_non_expert_adapters_use_dataset_weights():
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [25.0, 75.0]
+    freqs = [_freq([0.1] * E), _freq([0.9] * E)]
+    out = agg.flame_aggregate(loras, freqs, sizes, temperature=4)
+    got = out["blocks"]["pos0"]["attn"]["wq"]["a"]
+    want = 0.25 * loras[0]["blocks"]["pos0"]["attn"]["wq"]["a"] + \
+        0.75 * loras[1]["blocks"]["pos0"]["attn"]["wq"]["a"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_temperature_sharpens_weighting():
+    """Higher t pushes the aggregate toward the high-activation client."""
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [10.0, 10.0]
+    freqs = [_freq([0.9] * E), _freq([0.3] * E)]
+    hi = loras[0]["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"]
+
+    def dist_to_hi(t):
+        out = agg.flame_aggregate(loras, freqs, sizes, temperature=t)
+        got = out["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"]
+        return float(jnp.abs(got - hi).mean())
+
+    d = [dist_to_hi(t) for t in (0, 1, 2, 4, 8)]
+    assert all(d[i] > d[i + 1] for i in range(len(d) - 1)), d
+
+
+def test_hlora_components_average_over_trainers_only():
+    """Client 0 trained rank 2, client 1 rank 4: components 2–3 must come
+    from client 1 alone."""
+    full = [_client_lora(0), _client_lora(1)]
+    truncated = [L.truncate_rank(full[0], 2), full[1]]
+    out = agg.hlora_aggregate(truncated, client_ranks=[2, 4],
+                              dataset_sizes=[10.0, 10.0], r_full=4)
+    got = out["blocks"]["pos0"]["attn"]["wq"]["a"]
+    want_hi = full[1]["blocks"]["pos0"]["attn"]["wq"]["a"][..., 2:4]
+    np.testing.assert_allclose(np.asarray(got[..., 2:4]),
+                               np.asarray(want_hi), rtol=1e-5, atol=1e-6)
+    want_lo = 0.5 * (full[0]["blocks"]["pos0"]["attn"]["wq"]["a"][..., :2]
+                     + full[1]["blocks"]["pos0"]["attn"]["wq"]["a"][..., :2])
+    np.testing.assert_allclose(np.asarray(got[..., :2]),
+                               np.asarray(want_lo), rtol=1e-5, atol=1e-6)
+
+
+def test_flexlora_aggregates_in_delta_space():
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [20.0, 60.0]
+    scale = 0.5
+    out = agg.flexlora_aggregate(loras, sizes, r_full=R + 6, scale=scale)
+    recon = L.merge_delta(out, scale)
+    deltas = [L.merge_delta(c, scale) for c in loras]
+    want = jax.tree.map(lambda a, b: 0.25 * a + 0.75 * b, *deltas)
+    for a, b in zip(jax.tree.leaves(recon), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_activation_frequency_clipped_unit_range():
+    f = agg.activation_frequency({"pos0": jnp.asarray([[5.0, 0.0, 12.0]])},
+                                 total_tokens=10.0)
+    assert float(f["pos0"].max()) <= 1.0 and float(f["pos0"].min()) >= 0.0

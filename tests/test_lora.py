@@ -1,0 +1,93 @@
+"""LoRA adapter tests: no-op init, merge equivalence, rank surgery, SVD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_dense, tiny_moe
+from repro.core import lora as L
+from repro.models import model as M
+
+
+def _setup(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, cfg)
+    lora = L.init_lora(jax.random.fold_in(key, 1), cfg, params)
+    return key, params, lora
+
+
+def test_fresh_adapter_is_noop():
+    cfg = tiny_dense()
+    key, params, lora = _setup(cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    base, _ = M.forward(cfg, params, toks)
+    with_lora, _ = M.forward(cfg, params, toks,
+                             trainable={"lora": lora})
+    np.testing.assert_allclose(np.asarray(base), np.asarray(with_lora),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_expert_adapters_inherit_expert_axis():
+    cfg = tiny_moe()
+    _, params, lora = _setup(cfg)
+    e = lora["blocks"]["pos0"]["moe"]["experts"]
+    E = cfg.moe.num_experts
+    assert e["w1"]["a"].shape[1] == E       # (n_periods, E, d, r)
+    assert e["w1"]["a"].shape[-1] == cfg.lora.rank
+    assert e["w2"]["b"].shape[-2] == cfg.lora.rank
+
+
+def test_merge_into_params_matches_unmerged():
+    cfg = tiny_dense()
+    key, params, lora = _setup(cfg)
+    # give B nonzero values so the adapter actually does something
+    lora = jax.tree.map(
+        lambda t: t + 0.02 * jax.random.normal(key, t.shape, t.dtype), lora)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    unmerged, _ = M.forward(cfg, params, toks, trainable={"lora": lora})
+    merged = L.merge_into_params(params, lora, cfg.lora.scale)
+    merged_out, _ = M.forward(cfg, merged, toks)
+    np.testing.assert_allclose(np.asarray(unmerged), np.asarray(merged_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_truncate_then_pad_roundtrip():
+    cfg = tiny_dense()
+    _, params, lora = _setup(cfg)
+    r = cfg.lora.rank
+    small = L.truncate_rank(lora, 2)
+    back = L.pad_rank(small, r)
+    pair0 = lora["blocks"]["pos0"]["attn"]["wq"]
+    pad0 = back["blocks"]["pos0"]["attn"]["wq"]
+    assert pad0["a"].shape == pair0["a"].shape
+    np.testing.assert_allclose(np.asarray(pad0["a"][..., :2]),
+                               np.asarray(pair0["a"][..., :2]))
+    np.testing.assert_allclose(np.asarray(pad0["a"][..., 2:]), 0.0)
+
+
+def test_svd_refactor_reconstructs_low_rank_delta():
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (1, 16, 3))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (1, 3, 16))
+    scale = 0.5
+    delta = L.merge_delta({"x": {"a": a, "b": b}}, scale)
+    re = L.svd_refactor(delta, rank=3, scale=scale)
+    recon = L.merge_delta(re, scale)
+    np.testing.assert_allclose(np.asarray(recon["x"]),
+                               np.asarray(delta["x"]), rtol=1e-4, atol=1e-5)
+    # rank-2 refactor = best rank-2 approximation (error no worse than
+    # truncating the true singular spectrum)
+    re2 = L.svd_refactor(delta, rank=2, scale=scale)
+    recon2 = L.merge_delta(re2, scale)
+    s = np.linalg.svd(np.asarray(delta["x"][0]), compute_uv=False)
+    err = np.linalg.norm(np.asarray(recon2["x"][0] - delta["x"][0]))
+    np.testing.assert_allclose(err, s[2], rtol=1e-3)
+
+
+def test_rescaler_init_values():
+    cfg = tiny_moe()
+    r = L.init_rescalers(cfg, k_client=1)
+    # top_k=2, k_i=1 -> init at k/k_i = 2
+    np.testing.assert_allclose(np.asarray(r["pos0"]), 2.0)
+    assert L.init_rescalers(cfg, k_client=2, mode="none") is None
+    dense = tiny_dense()
+    assert L.init_rescalers(dense, 1) is None

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core.flops import count_params, flops_paper_convention
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import Corpus, DataConfig, make_corpus
+from repro.models.moe_layer import _capacity, topk_routing
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(2, 32), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_topk_invariants(E, k, seed):
+    k = min(k, E)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (16, E))
+    w, m = topk_routing(logits, k)
+    m_ = np.asarray(m)
+    w_ = np.asarray(w)
+    np.testing.assert_allclose(m_.sum(-1), k)           # exactly k selected
+    np.testing.assert_allclose(w_.sum(-1), 1.0, rtol=1e-4)
+    assert ((m_ == 0) | (m_ == 1)).all()
+    assert (w_ >= 0).all()
+    assert (w_[m_ == 0] == 0).all()                     # weight only on selected
+
+
+@given(st.integers(1, 4096), st.integers(1, 128), st.integers(1, 8),
+       st.floats(0.1, 4.0))
+def test_capacity_monotone_and_positive(T, E, k, cf):
+    k = min(k, E)
+    c = _capacity(T, E, k, cf)
+    assert c >= 8 and c % 8 == 0
+    assert _capacity(T, E, min(k + 1, E), cf) >= c      # monotone in k
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+def test_weighted_mean_stays_in_hull(sizes, seed):
+    """FedAvg output is elementwise inside [min, max] of client values."""
+    n = len(sizes)
+    key = jax.random.PRNGKey(seed)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i), (4, 4))}
+             for i in range(n)]
+    out = agg.fedavg(trees, sizes)
+    stack = np.stack([np.asarray(t["w"]) for t in trees])
+    assert (np.asarray(out["w"]) <= stack.max(0) + 1e-5).all()
+    assert (np.asarray(out["w"]) >= stack.min(0) - 1e-5).all()
+
+
+@given(st.integers(1, 8), st.floats(0.05, 10.0), st.integers(0, 10 ** 6))
+def test_dirichlet_partition_conserves_examples(n_clients, alpha, seed):
+    corpus = make_corpus(DataConfig(vocab_size=64, n_examples=128,
+                                    seq_len=32, n_clusters=4, seed=seed))
+    shards = dirichlet_partition(corpus, n_clients, alpha, seed=seed)
+    assert sum(len(s.tokens) for s in shards) == 128
+    assert all(len(s.tokens) >= 2 for s in shards)      # min shard guarantee
+
+
+@given(st.integers(1, 8))
+def test_flame_flops_monotone_in_k(k):
+    """Paper Table 1: FLOPs strictly increase with activated experts."""
+    from repro.configs.registry import get_config
+    cfg = get_config("olmoe-1.3b-6.9b", "full")
+    f1 = flops_paper_convention(cfg, 128, k=k, lora_rank=20)
+    f2 = flops_paper_convention(cfg, 128, k=min(k + 1, 64), lora_rank=20)
+    if k < 64:
+        assert f2 > f1
+    p = count_params(cfg, k=k)
+    assert p["active"] <= p["total"]
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_corpus_deterministic_given_seed(seed):
+    c1 = make_corpus(DataConfig(vocab_size=64, n_examples=16, seq_len=32,
+                                seed=seed))
+    c2 = make_corpus(DataConfig(vocab_size=64, n_examples=16, seq_len=32,
+                                seed=seed))
+    np.testing.assert_array_equal(c1.tokens, c2.tokens)
+    np.testing.assert_array_equal(c1.mask, c2.mask)
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=4, max_size=4),
+       st.integers(1, 8))
+def test_flame_weights_interpolate_clients(freqs_a, t):
+    """With two clients, each expert's aggregate lies on the segment
+    between the two client values (convexity of Eq. 7)."""
+    E_, NP_ = 4, 1
+    key = jax.random.PRNGKey(0)
+    mk = lambda s: {"blocks": {"pos0": {"moe": {"experts": {"w1": {
+        "a": jax.random.normal(jax.random.fold_in(key, s), (NP_, E_, 4, 2)),
+        "b": jnp.zeros((NP_, E_, 2, 4))}}}}}}
+    loras = [mk(0), mk(1)]
+    fa = {"pos0": jnp.asarray([freqs_a], jnp.float32)}
+    fb = {"pos0": 1.0 - jnp.asarray([freqs_a], jnp.float32)}
+    out = agg.flame_aggregate(loras, [fa, fb], [10.0, 10.0], temperature=t)
+    a0 = np.asarray(loras[0]["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"])
+    a1 = np.asarray(loras[1]["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"])
+    got = np.asarray(out["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"])
+    lo, hi = np.minimum(a0, a1), np.maximum(a0, a1)
+    assert (got <= hi + 1e-4).all() and (got >= lo - 1e-4).all()

@@ -1,0 +1,120 @@
+"""Roofline machinery tests: HLO trip-count parsing + analytic models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch import analytic, hlo_parse
+from repro.launch.roofline import Roofline
+
+
+def _scan_hlo(trips: int):
+    def f(x, ws):
+        def body(h, w):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((trips, 64, 64), jnp.float32))
+    return lowered.compile().as_text()
+
+
+def test_split_computations_finds_while_regions():
+    hlo = _scan_hlo(37)
+    comps = hlo_parse.split_computations(hlo)
+    assert len(comps) >= 2
+    assert any("while(" in t for t in comps.values())
+
+
+def test_trip_count_extraction():
+    hlo = _scan_hlo(37)
+    comps, mult = hlo_parse.computation_multipliers(hlo)
+    assert max(mult.values()) == 37.0
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(h, w):
+            def inner(h2, _):
+                return h2 @ w, None
+            h2, _ = jax.lax.scan(inner, h, None, length=5)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((7, 32, 32), jnp.float32)).compile().as_text()
+    _, mult = hlo_parse.computation_multipliers(hlo)
+    assert max(mult.values()) == 35.0        # 7 × 5
+
+
+def test_shape_bytes():
+    assert hlo_parse.shape_bytes("f32[128,4]{1,0}") == 128 * 4 * 4
+    assert hlo_parse.shape_bytes("bf16[2,3]") == 12
+    assert hlo_parse.shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert hlo_parse.shape_bytes("pred[]") == 1
+
+
+def test_collective_regex_matches_real_ops():
+    line = ("  %all-gather.1 = f32[128,512]{0,1} all-gather(%fusion), "
+            "channel_id=2, replica_groups=[4,4]<=[4,4]T(1,0)")
+    m = hlo_parse._COLLECTIVE.search(line)
+    assert m and m.group(2) == "all-gather"
+    assert hlo_parse.shape_bytes(m.group(1)) == 128 * 512 * 4
+
+
+# ---------------------------------------------------------------- analytic
+
+CHIPS = 256
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_analytic_terms_positive_and_ordered(shape_name):
+    cfg = get_config("qwen3-moe-235b-a22b",
+                     "swa" if shape_name == "long_500k" else "full")
+    shape = INPUT_SHAPES[shape_name]
+    knobs = {"k": 8, "n_micro": 8, "remat": True}
+    f = analytic.device_flops(cfg, shape, CHIPS, knobs)
+    b = analytic.device_bytes(cfg, shape, CHIPS, knobs)
+    m = analytic.model_flops_global(cfg, shape, knobs)
+    assert f > 0 and b > 0 and m > 0
+    # compiled work must be >= useful work (remat/backward overhead)
+    if shape.kind == "train":
+        assert f * CHIPS >= m
+
+
+def test_train_flops_scale_with_k():
+    """FLAME economics at the roofline level: fewer experts, fewer FLOPs."""
+    cfg = get_config("qwen3-moe-235b-a22b", "full")
+    shape = INPUT_SHAPES["train_4k"]
+    f8 = analytic.device_flops(cfg, shape, CHIPS, {"k": 8})
+    f1 = analytic.device_flops(cfg, shape, CHIPS, {"k": 1})
+    assert f1 < 0.7 * f8
+
+
+def test_decode_memory_dominated_by_cache():
+    cfg = get_config("llama3-405b", "full")
+    shape = INPUT_SHAPES["decode_32k"]
+    b = analytic.device_bytes(cfg, shape, CHIPS, {})
+    cache = analytic._cache_bytes(cfg, shape.global_batch,
+                                  shape.seq_len) / CHIPS
+    assert cache / b > 0.5
+
+
+def test_roofline_bottleneck_logic():
+    r = Roofline(arch="x", shape="y", mesh="m", chips=4,
+                 hlo_flops=197e12, hlo_bytes=1.0, collective_bytes=1.0,
+                 model_flops=4 * 197e12, bytes_per_device=1.0,
+                 collectives={}, meta={})
+    assert r.bottleneck == "compute"
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.mfu - 1.0) < 1e-6
+    r2 = Roofline(arch="x", shape="y", mesh="m", chips=4,
+                  hlo_flops=1.0, hlo_bytes=819e9, collective_bytes=50e9 * 2,
+                  model_flops=1.0, bytes_per_device=1.0,
+                  collectives={}, meta={})
+    assert r2.bottleneck == "collective"
+    assert abs(r2.step_time - 2.0) < 1e-9
