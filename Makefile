@@ -1,0 +1,23 @@
+# Developer entry points.  All targets assume the src/ layout and set
+# PYTHONPATH accordingly; no installation step exists or is needed.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-round docs-check
+
+# tier-1 verification (see ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -q
+
+# all paper-table/figure benchmarks + kernel and round-engine timings
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# just the looped-vs-batched round engine comparison
+bench-round:
+	$(PYTHON) -m benchmarks.run round_engine
+
+# README/docs must only reference modules & functions that exist
+docs-check:
+	$(PYTHON) tools/docs_check.py README.md docs/architecture.md docs/kernels.md

@@ -12,8 +12,9 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (fig2_activation, fig3_temperature, kernel_bench, table1_flops,
-               table2_budgets, table3_scale, table4_sampling, table5_rescaler)
+from . import (fig2_activation, fig3_temperature, kernel_bench,
+               round_engine_bench, table1_flops, table2_budgets,
+               table3_scale, table4_sampling, table5_rescaler)
 
 ALL = {
     "table1": table1_flops.run,
@@ -24,6 +25,7 @@ ALL = {
     "fig2": fig2_activation.run,
     "fig3": fig3_temperature.run,
     "kernels": kernel_bench.run,
+    "round_engine": round_engine_bench.run,
 }
 
 

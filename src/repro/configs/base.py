@@ -192,3 +192,11 @@ class FederatedConfig:
     method: str = "flame"             # flame|trivial|hlora|flexlora
     rescaler: str = "learnable"       # learnable|static|none
     seed: int = 0
+    # round execution engine: "batched" runs each budget cohort's local
+    # training in one compiled computation (vmap/lax.map over clients);
+    # "looped" is the sequential per-client reference oracle.
+    round_engine: str = "batched"     # batched|looped
+    # batched-engine lowering: "vmap" batches clients into one program,
+    # "map" (lax.map) runs them sequentially inside one compiled call —
+    # the fallback when C × local batch does not fit memory.
+    cohort_backend: str = "vmap"      # vmap|map

@@ -6,7 +6,10 @@
                           per-expert LoRA factors; non-expert adapters fall
                           back to dataset-size weighting (their "activation
                           frequency" is identically 1 — the paper's
-                          full-activation edge case).
+                          full-activation edge case).  Natively consumes
+                          *stacked* client trees (leading client axis, the
+                          batched round engine's output format); legacy
+                          Python lists are stacked on entry.
 * ``hlora_aggregate``   — HLoRA: zero-padded truncated adapters averaged with
                           per-rank-component sparsity weights.
 * ``flexlora_aggregate``— FlexLoRA: aggregate full ΔW = s·A_i·B_i, then SVD
@@ -21,7 +24,7 @@ dataset-size weighting.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,22 +39,37 @@ EPS = 1e-12
 # generic weighted tree averaging
 # --------------------------------------------------------------------------
 
-def _weighted_tree_mean(trees: Sequence[PyTree],
-                        weights: Sequence[float]) -> PyTree:
+def _as_stacked(client_trees) -> PyTree:
+    """Normalise aggregation input to the *stacked* form: a single pytree
+    whose every leaf carries a leading client axis ``(n, ...)``.
+
+    Python lists/tuples of per-client trees (the legacy interchange format)
+    are stacked here; an already-stacked tree (the batched round engine's
+    native output) passes through untouched."""
+    if isinstance(client_trees, (list, tuple)):
+        return lora_lib.stack_adapters(client_trees)
+    return client_trees
+
+
+def _weighted_tree_mean(trees, weights: Sequence[float]) -> PyTree:
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(w.sum(), EPS)
+    n = w.shape[0]
+    stacked = _as_stacked(trees)
 
-    def avg(*leaves):
-        acc = sum(wi * leaf.astype(jnp.float32)
-                  for wi, leaf in zip(w, leaves))
-        return acc.astype(leaves[0].dtype)
+    def avg(leaf):
+        acc = (leaf.astype(jnp.float32)
+               * w.reshape((n,) + (1,) * (leaf.ndim - 1))).sum(0)
+        return acc.astype(leaf.dtype)
 
-    return jax.tree.map(avg, *trees)
+    return jax.tree.map(avg, stacked)
 
 
-def fedavg(client_trees: Sequence[PyTree],
-           dataset_sizes: Sequence[float]) -> PyTree:
-    """Standard FedAvg (Eq. 3–4)."""
+def fedavg(client_trees, dataset_sizes: Sequence[float]) -> PyTree:
+    """Standard FedAvg (Eq. 3–4).
+
+    ``client_trees``: list of per-client pytrees OR a stacked pytree with a
+    leading client axis (see ``flame_aggregate`` for the stacked contract)."""
     return _weighted_tree_mean(client_trees, dataset_sizes)
 
 
@@ -66,53 +84,76 @@ def activation_frequency(counts: Dict[str, jnp.ndarray],
             for k, v in counts.items()}
 
 
-def flame_aggregate(client_loras: Sequence[PyTree],
-                    client_freqs: Sequence[Dict[str, jnp.ndarray]],
+def _stack_freqs(client_freqs, n: int) -> Dict[str, jnp.ndarray]:
+    """Normalise activation frequencies to {pos: (n, n_periods, E)}.
+
+    Accepts the stacked dict directly, or a list of per-client
+    {pos: (n_periods, E)} dicts.  A client whose shard produced no steps
+    reports no frequencies — it is filled with zeros, i.e. zero contribution
+    (the paper's zero-activation edge case)."""
+    if isinstance(client_freqs, dict):
+        return client_freqs
+    pos_keys = sorted({k for f in client_freqs for k in f})
+    out = {}
+    for pos in pos_keys:
+        ref = next(f[pos] for f in client_freqs if pos in f)
+        out[pos] = jnp.stack([jnp.asarray(client_freqs[i].get(
+            pos, jnp.zeros_like(ref))) for i in range(n)])     # (n, P, E)
+    return out
+
+
+def flame_aggregate(client_loras,
+                    client_freqs,
                     dataset_sizes: Sequence[float],
                     temperature: int) -> PyTree:
     """Aggregate client LoRA trees with Eq. 6–7.
 
-    ``client_freqs[i]``: {pos: (n_periods, E)} activation frequencies in
-    [0, 1].  Expert adapters (path containing moe/experts) receive per-expert
-    weights γ_i^j = freq^t · |D_i|; all other adapters use |D_i|.
-    """
-    n = len(client_loras)
+    Input contract (stacked form — the batched round engine's native output):
+
+    * ``client_loras``: a single pytree whose every leaf has a leading
+      client axis, i.e. leaf shape ``(n, n_periods, ...)`` — produced by
+      ``lora.stack_adapters`` or directly by ``client.cohort_update``.
+      A Python list/tuple of ``n`` per-client trees (the legacy form) is
+      accepted and stacked internally.
+    * ``client_freqs``: ``{pos: (n, n_periods, E)}`` activation frequencies
+      in [0, 1] — or a list of ``n`` per-client ``{pos: (n_periods, E)}``
+      dicts (missing keys ⇒ zero frequency).
+    * ``dataset_sizes``: length-``n`` vector |D_i| aligned with axis 0 of
+      the stacked inputs.
+
+    Expert adapters (leaves under a ``moe/experts`` path, shape
+    ``(n, n_periods, E, ...)``) receive per-expert weights
+    ``γ_i^j = freq^t · |D_i|`` normalised over clients; all other adapters
+    use plain dataset-size weights.  Everything happens on-device over the
+    stacked client axis — no per-client host round-trips."""
     sizes = jnp.asarray(dataset_sizes, jnp.float32)
+    n = sizes.shape[0]
+    stacked_loras = _as_stacked(client_loras)
+    freqs = _stack_freqs(client_freqs, n)
 
-    # per-(client, pos) expert weights: (n, n_periods, E).  A client whose
-    # shard produced no steps reports no frequencies — zero contribution
-    # (the paper's zero-activation edge case).
-    gamma = {}
-    pos_keys = sorted({k for f in client_freqs for k in f})
-    for pos in pos_keys:
-        ref = next(f[pos] for f in client_freqs if pos in f)
-        f = jnp.stack([client_freqs[i].get(pos, jnp.zeros_like(ref))
-                       for i in range(n)])                        # (n, P, E)
-        gamma[pos] = (f ** temperature) * sizes[:, None, None]
+    # per-(client, pos) expert weights γ: (n, n_periods, E)
+    gamma = {pos: (f ** temperature) * sizes[:, None, None]
+             for pos, f in freqs.items()}
+    w_size = sizes / jnp.maximum(sizes.sum(), EPS)
 
-    def aggregate_blocks(pos: str, nodes: List[PyTree], in_experts: bool):
-        """Recursively average client sub-trees for one block position."""
-        node0 = nodes[0]
-        if isinstance(node0, dict):
-            return {k: aggregate_blocks(pos, [nd[k] for nd in nodes],
-                                        in_experts or k == "experts")
-                    for k in node0}
-        stacked = jnp.stack([nd.astype(jnp.float32) for nd in nodes])  # (n,...)
+    def aggregate(pos: str, node: PyTree, in_experts: bool):
+        """Recursively average one block position's stacked sub-tree."""
+        if isinstance(node, dict):
+            return {k: aggregate(pos, v, in_experts or k == "experts")
+                    for k, v in node.items()}
+        leaf = node.astype(jnp.float32)                    # (n, ...)
         if in_experts and pos in gamma:
-            # leaf shape (n_periods, E, ...) -> weights (n, n_periods, E)
+            # leaf shape (n, n_periods, E, ...) <- weights (n, n_periods, E)
             g = gamma[pos]
-            g = g.reshape(g.shape + (1,) * (stacked.ndim - 3))
+            g = g.reshape(g.shape + (1,) * (leaf.ndim - 3))
             denom = jnp.maximum(g.sum(0), EPS)
-            out = (stacked * g).sum(0) / denom
+            out = (leaf * g).sum(0) / denom
         else:
-            w = sizes / jnp.maximum(sizes.sum(), EPS)
-            out = (stacked * w.reshape((n,) + (1,) * (stacked.ndim - 1))).sum(0)
-        return out.astype(node0.dtype)
+            out = (leaf * w_size.reshape((n,) + (1,) * (leaf.ndim - 1))).sum(0)
+        return out.astype(node.dtype)
 
-    blocks = {pos: aggregate_blocks(pos,
-                                    [cl["blocks"][pos] for cl in client_loras],
-                                    in_experts=False)
-              for pos in client_loras[0]["blocks"]}
+    blocks = {pos: aggregate(pos, node, in_experts=False)
+              for pos, node in stacked_loras["blocks"].items()}
     return {"blocks": blocks}
 
 

@@ -18,7 +18,8 @@ FLAME specifics:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +62,10 @@ def init_lora(key, cfg, params: PyTree, rank: Optional[int] = None) -> PyTree:
     rank = rank if rank is not None else cfg.lora.rank
     blocks = {}
     for pos_name, block in params["blocks"].items():
-        kb = jax.random.fold_in(key, hash(pos_name) % (2 ** 31))
+        # zlib.crc32, not hash(): str hashes are salted per process, which
+        # made adapter init — and borderline loss assertions — depend on
+        # PYTHONHASHSEED
+        kb = jax.random.fold_in(key, zlib.crc32(pos_name.encode()) % (2 ** 31))
         out: dict = {}
         for module, names in _TARGETS.items():
             if not _module_enabled(cfg, module):
@@ -118,6 +122,33 @@ def make_trainable(lora: Optional[PyTree],
     if rescaler is not None:
         t["rescaler"] = rescaler
     return t
+
+
+# --------------------------------------------------------------------------
+# client-axis stacking (batched round engine substrate)
+# --------------------------------------------------------------------------
+
+def stack_adapters(trees: Sequence[PyTree]) -> PyTree:
+    """Stack N structurally-identical adapter pytrees along a new leading
+    *client* axis: every leaf ``(...)`` becomes ``(N, ...)``.
+
+    This is the interchange format of the batched round engine: the server
+    stacks the per-client distributed adapters, ``cohort_update`` vmaps the
+    local-training program over axis 0, and ``flame_aggregate`` consumes the
+    stacked result directly (no per-client host round-trips).  All trees must
+    share structure and leaf shapes — the cohort builder guarantees this by
+    grouping clients by budget (same rank ⇒ same adapter shapes)."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def unstack_adapters(stacked: PyTree, n: Optional[int] = None
+                     ) -> Tuple[PyTree, ...]:
+    """Inverse of :func:`stack_adapters`: split leading axis 0 back into a
+    tuple of ``n`` per-client pytrees (``n`` defaults to the leading dim of
+    the first leaf)."""
+    if n is None:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+    return tuple(jax.tree.map(lambda l, i=i: l[i], stacked) for i in range(n))
 
 
 # --------------------------------------------------------------------------

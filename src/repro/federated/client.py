@@ -5,8 +5,23 @@ LoRA rank r_i for the compression baselines), and runs ``local_epochs`` of
 Adam over its shard each round (paper A2.2: Adam, lr 1.5e-4, batch 16,
 1 local epoch).
 
-The jit'd train step returns per-expert activation counts; the client
-accumulates them into the activation frequency a_i^j / S_i that the server's
+The local-training program is factored so the server can run it two ways:
+
+* **looped** (reference oracle): ``local_train`` — one jitted
+  ``local_update`` per client, exactly the paper's sequential simulation;
+* **batched** (round engine): ``cohort_update`` — the *same* pure
+  ``local_update`` program vmapped (or ``lax.map``-ed) over a leading
+  client axis, so a whole shape-homogeneous cohort trains in one compiled
+  computation.  Per-client activation counts accumulate inside the scan
+  carry, so the stacked counts feed ``flame_aggregate`` without host
+  round-trips.
+
+Both paths consume the same deterministic :class:`BatchPlan` (seeded by
+``(round_seed, client_id)``), which is what makes them numerically
+equivalent — verified in tests/test_round_engine.py.
+
+The jit'd train step returns per-expert activation counts; accumulated
+counts become the activation frequency a_i^j / S_i that the server's
 activation-aware aggregation consumes (token-level frequency — see
 core/aggregation.py docstring for the edge-case analysis).
 """
@@ -14,7 +29,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +52,112 @@ class ClientState:
     rank: int                     # LoRA rank (baselines truncate this)
     rescaler: Optional[PyTree]    # client-local s_i (persists across rounds)
     rescaler_mode: str = "learnable"
+    # β-tier label ("b1".."b4") — informational; cohort grouping keys on
+    # the derived shape tuple (k, rank, ...), see federated/cohort.py
+    budget: str = ""
 
     @property
     def dataset_size(self) -> int:
         return len(self.shard.tokens)
 
+
+# ==========================================================================
+# batch plans: the deterministic per-round data schedule
+# ==========================================================================
+
+@dataclass
+class BatchPlan:
+    """Materialised minibatch schedule for one client × one round.
+
+    ``tokens``/``labels``: (n_steps, B, S[, K]); ``mask``: (n_steps, B, S);
+    ``valid``: (n_steps,) — 1.0 for real steps, 0.0 for padding steps added
+    by :func:`stack_plans` so a cohort shares one static step count.  A
+    padding step re-runs step 0's batch but its update, counts and loss are
+    all discarded inside ``local_update`` (exact no-op, including the Adam
+    step counter)."""
+    tokens: np.ndarray
+    labels: np.ndarray
+    mask: np.ndarray
+    valid: np.ndarray
+
+    @property
+    def n_steps(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def batch_size(self) -> int:
+        return self.tokens.shape[1]
+
+
+def plan_batch_size(client: ClientState, tc: TrainConfig) -> int:
+    """Per-client step batch size: ``tc.batch_size``, shrunk so tiny shards
+    (Dirichlet tail clients) still get >= 1 batch per epoch."""
+    return max(1, min(tc.batch_size, len(client.shard.tokens)))
+
+
+def make_batch_plan(client: ClientState, tc: TrainConfig,
+                    round_seed: int) -> BatchPlan:
+    """Draw the client's round schedule: ``local_epochs`` shuffled epochs
+    over its shard, seeded by (round_seed, client_id) so looped and batched
+    execution consume byte-identical data."""
+    rng = np.random.default_rng(round_seed * 10_007 + client.client_id)
+    bs = plan_batch_size(client, tc)
+    toks, labs, msks = [], [], []
+    for _ in range(tc.local_epochs):
+        for tokens, labels, mask in batches(client.shard, bs, rng=rng):
+            toks.append(tokens)
+            labs.append(labels)
+            msks.append(mask)
+    if not toks:
+        # zero-step client (empty shard / local_epochs=0): one all-invalid
+        # dummy step so the scan has static length >= 1; local_update
+        # discards it entirely — zero counts, zero tokens, nan mean loss
+        # (the aggregation-side zero-activation edge case)
+        shape = (1, bs) + client.shard.tokens.shape[1:]
+        return BatchPlan(tokens=np.zeros(shape, np.int32),
+                         labels=np.zeros(shape, np.int32),
+                         mask=np.zeros((1, bs) + client.shard.mask.shape[1:],
+                                       np.float32),
+                         valid=np.zeros((1,), np.float32))
+    return BatchPlan(tokens=np.stack(toks), labels=np.stack(labs),
+                     mask=np.stack(msks),
+                     valid=np.ones((len(toks),), np.float32))
+
+
+def pad_plan(plan: BatchPlan, n_steps: int) -> BatchPlan:
+    """Pad a plan to ``n_steps`` with repeats of step 0 flagged invalid."""
+    extra = n_steps - plan.n_steps
+    if extra <= 0:
+        return plan
+
+    def rep(x):
+        return np.concatenate([x, np.repeat(x[:1], extra, axis=0)])
+
+    return BatchPlan(tokens=rep(plan.tokens), labels=rep(plan.labels),
+                     mask=rep(plan.mask),
+                     valid=np.concatenate([plan.valid,
+                                           np.zeros((extra,), np.float32)]))
+
+
+def stack_plans(plans: Sequence[BatchPlan]) -> BatchPlan:
+    """Stack per-client plans to (C, n_steps, B, S...) for ``cohort_update``,
+    padding shorter plans (smaller shards) with invalid no-op steps.  All
+    plans must share a batch size — the cohort builder groups by it."""
+    sizes = {p.batch_size for p in plans}
+    if len(sizes) > 1:
+        raise ValueError(f"cannot stack plans with mixed batch sizes {sizes}"
+                         " — cohort grouping should have split these")
+    n = max(p.n_steps for p in plans)
+    padded = [pad_plan(p, n) for p in plans]
+    return BatchPlan(tokens=np.stack([p.tokens for p in padded]),
+                     labels=np.stack([p.labels for p in padded]),
+                     mask=np.stack([p.mask for p in padded]),
+                     valid=np.stack([p.valid for p in padded]))
+
+
+# ==========================================================================
+# the pure local-training program (one client)
+# ==========================================================================
 
 @partial(jax.jit, static_argnames=("cfg", "k", "tc", "rescaler_trainable"))
 def _train_step(cfg: ModelConfig, params, trainable, opt_state, tokens,
@@ -63,49 +179,141 @@ def _train_step(cfg: ModelConfig, params, trainable, opt_state, tokens,
     return new_trainable, new_opt, loss, counts
 
 
+def _count_zeros(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Zeroed activation-count accumulator {pos: (n_periods, E)} matching
+    the counts pytree that model.lm_loss returns for MoE positions."""
+    P = cfg.pattern_period
+    n_periods = cfg.num_layers // P
+    return {f"pos{p}": jnp.zeros((n_periods, cfg.moe.num_experts),
+                                 jnp.float32)
+            for p in range(P) if cfg.layer_is_moe(p)}
+
+
+def local_update(cfg: ModelConfig, params: PyTree, trainable: PyTree,
+                 tokens, labels, mask, valid, *, k: int, tc: TrainConfig,
+                 rescaler_trainable: bool):
+    """One client's full local round as a pure scan — the vmappable unit.
+
+    ``tokens``/``labels``: (n_steps, B, S[, K]); ``mask``: (n_steps, B, S);
+    ``valid``: (n_steps,).  Invalid (padding) steps compute but discard
+    their update — trainable, Adam state (step counter included), counts
+    and loss all keep their prior value, so padded execution is bit-wise
+    equivalent to running fewer steps.
+
+    Returns ``(trainable, count_sums, token_count, loss_sum, n_valid)``
+    where ``count_sums`` is {pos: (n_periods, E)} summed over valid steps
+    and ``token_count`` is the number of tokens processed (the S_i unit of
+    the activation frequency a_i^j / S_i).
+    """
+    opt_state = adam.init(trainable)
+    tokens_per_step = float(np.prod(tokens.shape[1:3]))      # B * S
+    zero = jnp.zeros((), jnp.float32)
+    carry0 = (trainable, opt_state, _count_zeros(cfg), zero, zero, zero)
+
+    def body(carry, xs):
+        tr, opt, counts_acc, tok_acc, loss_acc, n_acc = carry
+        tok, lab, msk, val = xs
+        new_tr, new_opt, loss, counts = _train_step(
+            cfg, params, tr, opt, tok, lab, msk, k=k, tc=tc,
+            rescaler_trainable=rescaler_trainable)
+        keep = val > 0
+
+        def sel(new, old):
+            return jax.tree.map(lambda a, b: jnp.where(keep, a, b), new, old)
+
+        carry = (sel(new_tr, tr), sel(new_opt, opt),
+                 jax.tree.map(lambda a, c: a + jnp.where(keep, c, 0.0),
+                              counts_acc, counts),
+                 tok_acc + jnp.where(keep, tokens_per_step, 0.0),
+                 loss_acc + jnp.where(keep, loss, 0.0),
+                 n_acc + jnp.where(keep, 1.0, 0.0))
+        return carry, None
+
+    (tr, _, count_sums, tok, loss_sum, n_valid), _ = jax.lax.scan(
+        body, carry0, (tokens, labels, mask, valid))
+    return tr, count_sums, tok, loss_sum, n_valid
+
+
+_local_update_jit = jax.jit(
+    local_update, static_argnames=("cfg", "k", "tc", "rescaler_trainable"))
+
+
+# ==========================================================================
+# batched cohort execution (the round engine's compute core)
+# ==========================================================================
+
+@partial(jax.jit,
+         static_argnames=("cfg", "k", "tc", "rescaler_trainable", "backend"))
+def cohort_update(cfg: ModelConfig, params: PyTree, stacked_trainable: PyTree,
+                  tokens, labels, mask, valid, *, k: int, tc: TrainConfig,
+                  rescaler_trainable: bool, backend: str = "vmap"):
+    """Run :func:`local_update` for a whole cohort in one compiled call.
+
+    ``stacked_trainable``: pytree with leading client axis C (from
+    ``lora.stack_adapters``); ``tokens``…``valid``: stacked
+    :class:`BatchPlan` arrays (C, n_steps, ...).  The cohort must be
+    shape-homogeneous (same k, adapter rank, batch size) — the cohort
+    builder guarantees this.
+
+    ``backend="vmap"`` batches all clients into one program (fastest;
+    memory scales with C); ``backend="map"`` lowers to ``lax.map``, which
+    compiles the same single-client program once and runs clients
+    sequentially *inside* one computation — the fallback for memory-tight
+    configs.
+
+    Returns stacked ``(trainable, count_sums {pos: (C, n_periods, E)},
+    token_counts (C,), loss_sums (C,), n_valid (C,))``.
+    """
+    def one(tr, tok, lab, msk, val):
+        return local_update(cfg, params, tr, tok, lab, msk, val, k=k, tc=tc,
+                            rescaler_trainable=rescaler_trainable)
+
+    if backend == "vmap":
+        return jax.vmap(one)(stacked_trainable, tokens, labels, mask, valid)
+    if backend == "map":
+        return jax.lax.map(lambda a: one(*a),
+                           (stacked_trainable, tokens, labels, mask, valid))
+    raise ValueError(f"unknown cohort backend {backend!r}")
+
+
+# ==========================================================================
+# looped reference path (the sequential oracle)
+# ==========================================================================
+
 def local_train(cfg: ModelConfig, params: PyTree, global_lora: PyTree,
                 client: ClientState, tc: TrainConfig, round_seed: int
                 ) -> Tuple[PyTree, Dict[str, jnp.ndarray], float, Dict]:
-    """Run the client's local epoch(s).
+    """Run the client's local epoch(s) — sequential reference path.
 
     Returns (trained_lora, activation_frequencies, total_tokens, info).
     ``global_lora`` arrives already shaped for this client (full for FLAME,
-    rank-truncated for HLoRA/FlexLoRA).
+    rank-truncated for HLoRA/FlexLoRA).  Consumes the same
+    :class:`BatchPlan` as the batched engine, so ``cohort_update`` output
+    is allclose to running this per client.
     """
-    trainable = {"lora": global_lora}
-    if client.rescaler is not None:
-        trainable["rescaler"] = client.rescaler
-    opt_state = adam.init(trainable)
-    rng = np.random.default_rng(round_seed * 10_007 + client.client_id)
+    trainable = lora_lib.make_trainable(global_lora, client.rescaler)
+    plan = make_batch_plan(client, tc, round_seed)
+    trained, count_sums, tok, loss_sum, n_valid = _local_update_jit(
+        cfg, params, trainable, jnp.asarray(plan.tokens),
+        jnp.asarray(plan.labels), jnp.asarray(plan.mask),
+        jnp.asarray(plan.valid), k=client.k, tc=tc,
+        rescaler_trainable=(client.rescaler_mode == "learnable"))
 
-    count_sums: Dict[str, jnp.ndarray] = {}
-    total_tokens = 0.0
-    losses = []
-    # tiny shards (Dirichlet tail clients) still get >= 1 batch per epoch
-    bs = max(1, min(tc.batch_size, len(client.shard.tokens)))
-    for _ in range(tc.local_epochs):
-        for tokens, labels, mask in batches(client.shard, bs, rng=rng):
-            tokens = jnp.asarray(tokens)
-            labels = jnp.asarray(labels)
-            mask = jnp.asarray(mask)
-            trainable, opt_state, loss, counts = _train_step(
-                cfg, params, trainable, opt_state, tokens, labels, mask,
-                k=client.k, tc=tc,
-                rescaler_trainable=(client.rescaler_mode == "learnable"))
-            losses.append(float(loss))
-            # counts: {pos: (n_periods, E)} per step — accumulate
-            for pos, c in counts.items():
-                count_sums[pos] = count_sums.get(pos, 0.0) + c
-            total_tokens += float(np.prod(tokens.shape[:2]))
-
+    total_tokens = float(tok)
     freqs = {pos: np.asarray(c) / max(total_tokens, 1.0)
              for pos, c in count_sums.items()}
-    if "rescaler" in trainable:
-        client.rescaler = trainable["rescaler"]   # persist s_i locally
-    info = {"mean_loss": float(np.mean(losses)) if losses else float("nan"),
-            "steps": len(losses)}
-    return trainable["lora"], freqs, total_tokens, info
+    if "rescaler" in trained:
+        client.rescaler = trained["rescaler"]     # persist s_i locally
+    steps = int(n_valid)
+    info = {"mean_loss": (float(loss_sum) / steps if steps
+                          else float("nan")),
+            "steps": steps}
+    return trained["lora"], freqs, total_tokens, info
 
+
+# ==========================================================================
+# evaluation
+# ==========================================================================
 
 @partial(jax.jit, static_argnames=("cfg", "k"))
 def _eval_step(cfg, params, tokens, labels, mask, trainable, k):

@@ -1,0 +1,72 @@
+"""Cohort construction for the batched round engine.
+
+``jax.vmap`` over clients requires every stacked operand to be
+shape-homogeneous: same expert budget ``k_i`` (static top-k ⇒ static
+dispatch capacity), same adapter rank (leaf shapes), same rescaler
+presence (pytree structure) and same step batch size.  All of these are
+functions of the client's β budget tier plus its shard size, so cohorts
+are, in effect, *budget groups*: a round's participants split into one
+cohort per distinct budget, and each cohort trains in one compiled
+``cohort_update`` call.
+
+The grouping key deliberately uses the *distributed* adapter rank, not the
+client's nominal rank: the "trivial" baseline distributes the globally
+minimal rank to everyone, so all its clients land in one cohort even
+though their nominal ranks differ.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from ..configs.base import TrainConfig
+from . import client as client_lib
+
+CohortKey = Tuple[int, int, int, bool, str]
+
+
+def cohort_key(c: client_lib.ClientState, tc: TrainConfig,
+               dist_rank: int) -> CohortKey:
+    """Shape-homogeneity key: (k_i, distributed rank, step batch size,
+    rescaler presence, rescaler mode)."""
+    return (c.k, dist_rank, client_lib.plan_batch_size(c, tc),
+            c.rescaler is not None, c.rescaler_mode)
+
+
+@dataclass
+class Cohort:
+    """One shape-homogeneous vmap group within a round's participants."""
+    key: CohortKey
+    members: List[int]            # indices into the round's participant list
+
+    @property
+    def k(self) -> int:
+        return self.key[0]
+
+    @property
+    def rank(self) -> int:
+        return self.key[1]
+
+
+def build_cohorts(clients: Sequence[client_lib.ClientState],
+                  tc: TrainConfig,
+                  rank_of: Optional[Callable[[client_lib.ClientState], int]]
+                  = None) -> List[Cohort]:
+    """Group a round's participating clients into vmap-able cohorts.
+
+    ``clients``: the participants (already sampled); ``rank_of`` maps a
+    client to the rank of the adapter the server will *distribute* to it
+    (method-dependent — defaults to the client's own rank).  Cohorts are
+    returned in first-appearance order, and every participant appears in
+    exactly one cohort, so looping cohorts preserves the round's client
+    coverage."""
+    rank_of = rank_of or (lambda c: c.rank)
+    order: List[CohortKey] = []
+    groups = {}
+    for i, c in enumerate(clients):
+        key = cohort_key(c, tc, rank_of(c))
+        if key not in groups:
+            groups[key] = Cohort(key=key, members=[])
+            order.append(key)
+        groups[key].members.append(i)
+    return [groups[k] for k in order]

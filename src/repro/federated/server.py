@@ -11,18 +11,33 @@ Implements the four compared methods end-to-end:
                    sparsity-weighted aggregation over rank components.
   * ``flexlora`` — clients train truncated adapters; server aggregates full
                    ΔW = s·A·B and SVD-refactors back to the server rank.
+
+Round execution (``fed.round_engine``):
+
+  * ``"batched"`` (default) — participants are grouped into budget cohorts
+    (see federated/cohort.py) and each cohort's local training runs as ONE
+    compiled ``client.cohort_update`` call (vmap or lax.map over the client
+    axis).  For FLAME the per-cohort stacked adapters and activation counts
+    are concatenated along the client axis and fed to ``flame_aggregate``
+    directly — device-resident end-to-end.
+  * ``"looped"`` — the sequential per-client reference oracle (one
+    ``client.local_train`` per participant).  Kept as the correctness
+    baseline; tests assert the batched path matches it allclose.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import FederatedConfig, ModelConfig, TrainConfig
 from ..core import aggregation as agg
 from ..core import lora as lora_lib
 from . import client as client_lib
+from .cohort import build_cohorts
 
 PyTree = Any
 
@@ -56,6 +71,18 @@ class FederatedServer:
         self._rng = np.random.default_rng(fed.seed + 999)
 
     # ----------------------------------------------------------- distribution
+    def _dist_rank(self, c: client_lib.ClientState) -> int:
+        """Rank of the adapter the server distributes to client ``c`` —
+        the shape the cohort builder must group by."""
+        m = self.fed.method
+        if m == "flame":
+            return max(cl.rank for cl in self.clients)   # full rank, always
+        if m == "trivial":
+            return min(cl.rank for cl in self.clients)
+        if m in ("hlora", "flexlora"):
+            return c.rank
+        raise ValueError(f"unknown method {m!r}")
+
     def _distribute(self, c: client_lib.ClientState) -> PyTree:
         m = self.fed.method
         if m == "flame":
@@ -68,9 +95,10 @@ class FederatedServer:
         raise ValueError(f"unknown method {m!r}")
 
     # ------------------------------------------------------------ aggregation
-    def _aggregate(self, loras: List[PyTree],
-                   freqs: List[Dict[str, np.ndarray]],
-                   sizes: List[float], parts: List[int]) -> PyTree:
+    def _aggregate(self, loras, freqs, sizes: List[float],
+                   parts: List[int]) -> PyTree:
+        """``loras``/``freqs`` may be Python lists (looped path) or stacked
+        trees with a leading client axis (batched FLAME path)."""
         m = self.fed.method
         r_full = max(cl.rank for cl in self.clients)
         if m == "flame":
@@ -90,12 +118,20 @@ class FederatedServer:
         raise ValueError(m)
 
     # ----------------------------------------------------------------- rounds
-    def run_round(self, round_idx: int) -> RoundResult:
+    def _sample_participants(self) -> List[int]:
         n = len(self.clients)
         n_part = max(1, int(round(self.fed.participation * n)))
-        parts = sorted(self._rng.choice(n, size=n_part, replace=False)
-                       .tolist())
+        return sorted(self._rng.choice(n, size=n_part, replace=False)
+                      .tolist())
 
+    def run_round(self, round_idx: int) -> RoundResult:
+        if self.fed.round_engine == "looped":
+            return self._run_round_looped(round_idx)
+        return self._run_round_batched(round_idx)
+
+    def _run_round_looped(self, round_idx: int) -> RoundResult:
+        """Sequential reference path: one local_train call per client."""
+        parts = self._sample_participants()
         loras, freqs, sizes, losses = [], [], [], []
         for i in parts:
             c = self.clients[i]
@@ -110,6 +146,90 @@ class FederatedServer:
 
         self.global_lora = self._aggregate(loras, freqs, sizes, parts)
         res = RoundResult(round_idx, losses, freqs, parts)
+        self.history.append(res)
+        return res
+
+    def _run_round_batched(self, round_idx: int) -> RoundResult:
+        """Batched round engine: one compiled cohort_update per budget
+        cohort; FLAME aggregation consumes the stacked outputs directly."""
+        parts = self._sample_participants()
+        round_seed = self.fed.seed * 1000 + round_idx
+        part_clients = [self.clients[i] for i in parts]
+        cohorts = build_cohorts(part_clients, self.tc,
+                                rank_of=self._dist_rank)
+
+        # per-participant results, keyed by position in `parts`
+        loras_by_pos: Dict[int, PyTree] = {}
+        freqs_by_pos: Dict[int, Dict[str, np.ndarray]] = {}
+        losses_by_pos: Dict[int, float] = {}
+        # FLAME: cohort-stacked trees, concatenated on the client axis below
+        stacked_loras, stacked_freqs, stacked_order = [], [], []
+
+        for co in cohorts:
+            members = [part_clients[i] for i in co.members]
+            trainables = [lora_lib.make_trainable(self._distribute(c),
+                                                  c.rescaler)
+                          for c in members]
+            stacked_tr = lora_lib.stack_adapters(trainables)
+            plan = client_lib.stack_plans(
+                [client_lib.make_batch_plan(c, self.tc, round_seed)
+                 for c in members])
+            rescaler_trainable = (co.key[4] == "learnable")
+            out_tr, counts, tok, loss_sum, n_valid = client_lib.cohort_update(
+                self.cfg, self.params, stacked_tr,
+                jnp.asarray(plan.tokens), jnp.asarray(plan.labels),
+                jnp.asarray(plan.mask), jnp.asarray(plan.valid),
+                k=co.k, tc=self.tc, rescaler_trainable=rescaler_trainable,
+                backend=self.fed.cohort_backend)
+
+            # stacked activation frequencies {pos: (C, n_periods, E)}
+            denom = jnp.maximum(tok, 1.0)[:, None, None]
+            freqs = {pos: c / denom for pos, c in counts.items()}
+
+            if "rescaler" in out_tr:
+                for c, r in zip(members,
+                                lora_lib.unstack_adapters(
+                                    out_tr["rescaler"], len(members))):
+                    c.rescaler = r                       # persist s_i locally
+
+            loss_means = np.asarray(loss_sum) / np.maximum(
+                np.asarray(n_valid), 1.0)
+            for j, pos in enumerate(co.members):
+                losses_by_pos[pos] = float(loss_means[j])
+                freqs_by_pos[pos] = {p: np.asarray(f[j])
+                                     for p, f in freqs.items()}
+
+            if self.fed.method == "flame":
+                stacked_loras.append(out_tr["lora"])
+                stacked_freqs.append(freqs)
+                stacked_order.extend(co.members)
+            else:
+                for j, pos in enumerate(co.members):
+                    loras_by_pos[pos] = jax.tree.map(lambda l, j=j: l[j],
+                                                     out_tr["lora"])
+
+        sizes = [float(c.dataset_size) for c in part_clients]
+        if self.fed.method == "flame":
+            # concatenate cohorts on the client axis — still device-resident
+            cat = (stacked_loras[0] if len(stacked_loras) == 1 else
+                   jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                *stacked_loras))
+            cat_freqs = {pos: jnp.concatenate([f[pos] for f in stacked_freqs],
+                                              axis=0)
+                         for pos in (stacked_freqs[0] if stacked_freqs
+                                     else {})}
+            cat_sizes = [sizes[pos] for pos in stacked_order]
+            self.global_lora = self._aggregate(cat, cat_freqs, cat_sizes,
+                                               parts)
+        else:
+            loras = [loras_by_pos[i] for i in range(len(parts))]
+            freqs_l = [freqs_by_pos[i] for i in range(len(parts))]
+            self.global_lora = self._aggregate(loras, freqs_l, sizes, parts)
+
+        res = RoundResult(round_idx,
+                          [losses_by_pos[i] for i in range(len(parts))],
+                          [freqs_by_pos[i] for i in range(len(parts))],
+                          parts)
         self.history.append(res)
         return res
 

@@ -3,6 +3,12 @@
 Builds (model, data shards, budgeted clients, server) for a given method ×
 budget grid — the harness behind the Table 2–5 / Figure 2–4 benchmarks.
 Budgets are assigned uniformly across the client population (paper §3.2).
+
+Budget assignment doubles as *cohort structure* for the batched round
+engine: clients sharing a β tier have identical expert budgets k_i and
+adapter ranks, so each round's participants split into at most four
+shape-homogeneous vmap groups (see federated/cohort.py, re-exported here
+as :func:`build_cohorts`).
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ from ..data.partition import dirichlet_partition
 from ..data.synthetic import Corpus, DataConfig, make_corpus, split_corpus
 from ..models import model as model_lib
 from . import client as client_lib
+from .cohort import build_cohorts  # noqa: F401  (re-export: cohort builder)
 from .server import (DENSE_BUDGET_RANKS, FLAME_BUDGET_K, MOE_BUDGET_RANKS,
                      FederatedServer)
 
@@ -32,7 +39,14 @@ class Experiment:
 
 
 def budget_for_client(i: int, budget: Optional[str]) -> str:
-    """Uniform assignment β1..β4 across clients, or a fixed budget."""
+    """Budget tier for client ``i``: round-robin β1..β4 when ``budget`` is
+    None (the paper's uniform heterogeneous setting), else the fixed tier.
+
+    The tier determines the client's expert budget k_i (FLAME) or LoRA rank
+    r_i (baselines) — and therefore its *cohort*: the batched round engine
+    vmaps local training over clients with identical tiers, so round-robin
+    assignment yields at most four cohorts per round regardless of the
+    client count."""
     return budget if budget else f"b{(i % 4) + 1}"
 
 
@@ -40,10 +54,21 @@ def build_experiment(cfg: ModelConfig, *, fed: FederatedConfig,
                      tc: TrainConfig, data: DataConfig,
                      budget: Optional[str] = None,
                      base_params=None) -> Experiment:
-    """``budget=None`` assigns β1–β4 uniformly (the paper's main setting);
+    """Assemble an :class:`Experiment`: init the base model + global LoRA,
+    generate and Dirichlet-partition the corpus, and build one budgeted
+    :class:`client_lib.ClientState` per client.
+
+    ``budget=None`` assigns β1–β4 uniformly (the paper's main setting);
     ``budget="b4"`` pins every client to one row of the tables.
     ``base_params``: a pre-trained frozen base (the paper fine-tunes
-    pretrained LLMs; passing this reproduces that regime at bench scale)."""
+    pretrained LLMs; passing this reproduces that regime at bench scale).
+
+    Each client records its β tier (``ClientState.budget``); at round time
+    the server groups participants into per-tier cohorts (same k_i, same
+    distributed rank ⇒ shape-homogeneous) and runs each cohort's local
+    training as one vmapped computation (``fed.round_engine="batched"``,
+    the default) or falls back to the sequential reference loop
+    (``"looped"``)."""
     key = jax.random.PRNGKey(fed.seed)
     params = (base_params if base_params is not None
               else model_lib.init_params(key, cfg))
@@ -75,7 +100,8 @@ def build_experiment(cfg: ModelConfig, *, fed: FederatedConfig,
             rescaler = lora_lib.init_rescalers(cfg, k_i, fed.rescaler)
         clients.append(client_lib.ClientState(
             client_id=i, shard=shards[i], k=k_i or cfg.moe.top_k,
-            rank=rank_i, rescaler=rescaler, rescaler_mode=fed.rescaler))
+            rank=rank_i, rescaler=rescaler, rescaler_mode=fed.rescaler,
+            budget=b))
 
     server = FederatedServer(cfg, params, global_lora, clients, fed, tc)
     return Experiment(cfg=cfg, server=server, val=val, test=test,

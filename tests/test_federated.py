@@ -1,5 +1,7 @@
 """End-to-end federated integration tests: all four methods, sampling,
 rescaler modes, checkpoint round-trip of federated state."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -73,10 +75,13 @@ def test_flame_client_budgets_differ():
 
 def test_training_reduces_loss_over_rounds():
     """Two FLAME rounds on the learnable synthetic corpus move val loss
-    down versus the fresh-init model."""
+    down versus the fresh-init model.  Uses the LoRA-scale lr appropriate
+    for the 2-layer smoke model (at the paper's 1.5e-4 the margin is
+    < 0.002 nats — below init-seed noise; see benchmarks/common.py)."""
     fed = FederatedConfig(num_clients=2, rounds=2, method="flame",
                           temperature=2)
-    exp = build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+    tc = dataclasses.replace(TC, learning_rate=1e-2)
+    exp = build_experiment(CFG, fed=fed, tc=tc, data=DATA)
     from repro.federated.client import evaluate
     init_loss = evaluate(CFG, exp.server.params, None, exp.val,
                          k=CFG.moe.top_k)

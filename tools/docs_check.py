@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs smoke-checker (`make docs-check`).
+
+Every dotted ``repro.*`` reference in the given markdown files — inside
+fenced code blocks, inline code spans, or prose — must resolve to an
+importable module, or to an attribute reachable from one. Keeps the
+README / docs honest: renaming or deleting a module/function without
+updating the docs fails CI.
+
+Usage:  PYTHONPATH=src python tools/docs_check.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from typing import List, Tuple
+
+DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+FROM_IMPORT = re.compile(
+    r"^\s*from\s+(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)*)\s+import\s+([\w ,]+)",
+    re.MULTILINE)
+
+
+def resolve(dotted: str) -> Tuple[bool, str]:
+    """Import the longest module prefix of ``dotted``, then getattr-walk
+    the rest.  Returns (ok, reason)."""
+    parts = dotted.split(".")
+    obj = None
+    depth = 0
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            depth = i
+            break
+        except ImportError:
+            continue
+    if obj is None:
+        return False, "no importable module prefix"
+    for attr in parts[depth:]:
+        if not hasattr(obj, attr):
+            return False, (f"module {'.'.join(parts[:depth])!r} has no "
+                           f"attribute path {'.'.join(parts[depth:])!r}")
+        obj = getattr(obj, attr)
+    return True, ""
+
+
+def check_file(path: str) -> List[str]:
+    text = open(path).read()
+    errors = []
+    refs = set(DOTTED.findall(text))
+    for mod, names in FROM_IMPORT.findall(text):
+        refs.add(mod)
+        refs.update(f"{mod}.{n.strip()}" for n in names.split(",")
+                    if n.strip())
+    for ref in sorted(refs):
+        ok, why = resolve(ref)
+        if not ok:
+            errors.append(f"{path}: `{ref}` does not resolve ({why})")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: docs_check.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    checked = 0
+    for path in argv:
+        errs = check_file(path)
+        errors.extend(errs)
+        checked += 1
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"docs-check: {checked} file(s), "
+          f"{'OK' if not errors else f'{len(errors)} broken reference(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
