@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-round docs-check
+.PHONY: test bench bench-round bench-smoke docs-check changes-check ci
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -18,6 +18,22 @@ bench:
 bench-round:
 	$(PYTHON) -m benchmarks.run round_engine
 
+# the fast CI subset (kernel micro-bench + end-to-end backend bench),
+# JSON results written to bench-smoke.json (the CI artifact)
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --smoke --out bench-smoke.json
+
 # README/docs must only reference modules & functions that exist
 docs-check:
 	$(PYTHON) tools/docs_check.py README.md docs/architecture.md docs/kernels.md
+
+# every PR must commit its CHANGES.md entry (CI runs --base origin/main)
+changes-check:
+	$(PYTHON) tools/changes_check.py
+
+# local mirror of .github/workflows/ci.yml (keep the two in sync):
+# tier-1 tests, docs-check, benchmark smoke + artifact, CHANGES.md check
+ci: changes-check
+	$(PYTHON) -m pytest -x -q
+	$(MAKE) docs-check
+	$(MAKE) bench-smoke

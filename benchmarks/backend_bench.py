@@ -1,0 +1,89 @@
+"""End-to-end kernel-backend benchmark (the kernel_bench successor).
+
+For each config family (dense = flash-attention hot path; moe = router +
+fused expert-LoRA hot path) time one full **forward+backward** training
+step — ``jax.value_and_grad`` of ``repro.models.model.lm_loss`` over the
+LoRA trainables — under each kernel backend:
+
+  * ``reference``        — the jnp oracles (what CPU runs by default);
+  * ``pallas-interpret`` — the Pallas kernels under the interpreter (the
+    CI parity configuration; *expected to be slower on CPU* — the
+    interpreter exists for correctness, not speed).
+
+On real TPU hardware the same harness compares compiled-Pallas against the
+references; CPU numbers only track relative regressions of each path.  The
+per-op micro-benchmarks live on in ``benchmarks.kernel_bench``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import KernelConfig, LoRAConfig, ModelConfig, \
+    MoEConfig
+from repro.core import lora as lora_lib
+from repro.models import model as model_lib
+
+from .common import emit, timeit
+
+BACKENDS = {
+    "reference": KernelConfig(backend="reference"),
+    "pallas-interpret": KernelConfig(backend="pallas", interpret=True),
+}
+
+
+def _families():
+    common = dict(num_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  vocab_size=256, head_dim=16, lora=LoRAConfig(rank=8),
+                  dtype="float32")
+    return {
+        "dense": ModelConfig(name="bench-dense", family="dense", d_ff=128,
+                             **common),
+        "moe": ModelConfig(name="bench-moe", family="moe", d_ff=0,
+                           moe=MoEConfig(num_experts=8, top_k=2,
+                                         d_expert=64), **common),
+    }
+
+
+def _step_time_us(cfg, batch=4, seq=64):
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(key, cfg)
+    lora = lora_lib.init_lora(jax.random.fold_in(key, 1), cfg, params)
+    resc = lora_lib.init_rescalers(cfg, cfg.moe.top_k) \
+        if cfg.moe.enabled else None
+    trainable = lora_lib.make_trainable(lora, resc)
+    tokens = jax.random.randint(jax.random.fold_in(key, 2), (batch, seq),
+                                0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32)
+
+    @jax.jit
+    def step(tr):
+        def f(tr):
+            loss, _ = model_lib.lm_loss(cfg, params, tokens, labels, mask,
+                                        trainable=tr, k=cfg.moe.top_k or None)
+            return loss
+        return jax.value_and_grad(f)(tr)
+
+    return timeit(lambda: jax.block_until_ready(step(trainable)))
+
+
+def run() -> None:
+    rows = []
+    per_family = {}
+    for fam, cfg in _families().items():
+        for bname, kcfg in BACKENDS.items():
+            us = _step_time_us(cfg.replace(kernels=kcfg))
+            rows.append({"family": fam, "backend": bname,
+                         "fwd_bwd_us_per_step": us})
+            per_family.setdefault(fam, {})[bname] = us
+    emit("backend_bench", rows, ["family", "backend", "fwd_bwd_us_per_step"])
+    for fam, t in per_family.items():
+        ratio = t["pallas-interpret"] / t["reference"]
+        print(f"# [{fam}] pallas-interpret / reference step time = "
+              f"{ratio:.2f}x (interpreter overhead on CPU; compiled Pallas "
+              f"is the TPU path)")
+
+
+if __name__ == "__main__":
+    run()

@@ -147,13 +147,31 @@ def run_setting(method: str, *, budget: Optional[str] = None,
     return out
 
 
+# Every emit() call also appends machine-readable rows here so the runner
+# can dump one JSON artifact per invocation (CI uploads it) — see
+# benchmarks.run --smoke --out.
+RESULTS: List[Dict] = []
+
+
 def emit(name: str, rows: List[Dict], keys: List[str]) -> None:
     """CSV block: header + rows, prefixed with the benchmark name."""
     print(f"\n# {name}")
     print(",".join(["bench"] + keys))
     for r in rows:
         print(",".join([name] + [_fmt(r.get(k)) for k in keys]))
+        RESULTS.append({"bench": name,
+                        **{k: _jsonable(r.get(k)) for k in keys}})
     sys.stdout.flush()
+
+
+def _jsonable(v):
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    return str(v)
 
 
 def _fmt(v) -> str:

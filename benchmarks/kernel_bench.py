@@ -1,6 +1,8 @@
-"""Micro-benchmarks of the kernel layer (CPU timings of the jnp oracles and
-interpret-mode kernels — TPU numbers come from the §Roofline dry-run, not
-wall clock; these timings track relative regressions only)."""
+"""Per-op micro-benchmarks of the kernel layer (CPU timings of the jnp
+oracles — TPU numbers come from the §Roofline dry-run, not wall clock;
+these timings track relative regressions only).  The end-to-end
+reference-vs-pallas training-step comparison lives in
+``benchmarks.backend_bench``."""
 from __future__ import annotations
 
 import jax

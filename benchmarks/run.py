@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table1 fig3
+  PYTHONPATH=src python -m benchmarks.run --smoke --out bench-smoke.json
+
+``--smoke`` runs the fast hardware-facing subset (kernel micro-bench +
+end-to-end backend bench) — the CI job.  ``--out PATH`` writes every
+emitted row as JSON (the artifact CI uploads).
 
 Output: CSV blocks (``name,...`` headers) + `#` summary lines asserting the
 paper's directional claims.  Roofline numbers live in EXPERIMENTS.md
@@ -9,12 +14,13 @@ paper's directional claims.  Roofline numbers live in EXPERIMENTS.md
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
-from . import (fig2_activation, fig3_temperature, kernel_bench,
-               round_engine_bench, table1_flops, table2_budgets,
-               table3_scale, table4_sampling, table5_rescaler)
+from . import (backend_bench, common, fig2_activation, fig3_temperature,
+               kernel_bench, round_engine_bench, table1_flops,
+               table2_budgets, table3_scale, table4_sampling, table5_rescaler)
 
 ALL = {
     "table1": table1_flops.run,
@@ -25,12 +31,24 @@ ALL = {
     "fig2": fig2_activation.run,
     "fig3": fig3_temperature.run,
     "kernels": kernel_bench.run,
+    "backend": backend_bench.run,
     "round_engine": round_engine_bench.run,
 }
 
+# CPU-fast subset for CI (`--smoke`): no pretraining, no federated rounds
+SMOKE = ["kernels", "backend"]
 
-def main() -> None:
-    picks = sys.argv[1:] or list(ALL)
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("picks", nargs="*", help=f"subset of {list(ALL)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the fast CI subset")
+    ap.add_argument("--out", metavar="PATH",
+                    help="write emitted rows as JSON to PATH")
+    ns = ap.parse_args(argv)
+
+    picks = ns.picks or (SMOKE if ns.smoke else list(ALL))
     t0 = time.time()
     for name in picks:
         if name not in ALL:
@@ -39,7 +57,13 @@ def main() -> None:
         t = time.time()
         ALL[name]()
         print(f"# [{name}] done in {time.time() - t:.1f}s", flush=True)
-    print(f"\n# all benchmarks done in {time.time() - t0:.1f}s")
+    wall = time.time() - t0
+    print(f"\n# all benchmarks done in {wall:.1f}s")
+    if ns.out:
+        with open(ns.out, "w") as f:
+            json.dump({"benchmarks": picks, "wall_s": round(wall, 2),
+                       "results": common.RESULTS}, f, indent=1)
+        print(f"# wrote {len(common.RESULTS)} rows to {ns.out}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,31 @@ class SSMConfig:
 
 
 @dataclass(frozen=True)
+class KernelConfig:
+    """Kernel-backend selection (see docs/kernels.md §Selecting a backend).
+
+    ``backend``:
+      * ``"auto"``      — fused Pallas kernels on TPU, jnp references
+        elsewhere (the safe default: nothing changes on CPU);
+      * ``"pallas"``    — force the Pallas kernels everywhere; off-TPU they
+        execute under the Pallas interpreter (slow, bit-faithful — the CI
+        parity configuration);
+      * ``"reference"`` — force the pure-jnp reference implementations
+        everywhere, including on TPU (the debugging oracle).
+
+    ``interpret`` forces the Pallas interpreter even on TPU — the escape
+    hatch for debugging a miscompiled kernel without leaving the device.
+    Frozen + hashable so ``ModelConfig`` stays usable as a jit static arg.
+    """
+
+    backend: str = "auto"         # auto|pallas|reference
+    interpret: bool = False
+
+    def validate(self) -> None:
+        assert self.backend in ("auto", "pallas", "reference"), self.backend
+
+
+@dataclass(frozen=True)
 class LoRAConfig:
     """LoRA adapter configuration (the paper's trainable surface)."""
 
@@ -94,6 +119,7 @@ class ModelConfig:
     moe: MoEConfig = field(default_factory=MoEConfig)
     ssm: SSMConfig = field(default_factory=SSMConfig)
     lora: LoRAConfig = field(default_factory=LoRAConfig)
+    kernels: KernelConfig = field(default_factory=KernelConfig)
 
     # hybrid layer pattern, cycled over depth; None -> homogeneous
     #   e.g. Jamba period-8: ("ssm","ssm","ssm","attn","ssm","ssm","ssm","ssm")
@@ -147,6 +173,7 @@ class ModelConfig:
             assert self.n_heads % max(self.n_kv_heads, 1) == 0
         if self.moe.enabled:
             assert self.moe.top_k <= self.moe.num_experts
+        self.kernels.validate()
 
 
 @dataclass(frozen=True)

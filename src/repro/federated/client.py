@@ -261,6 +261,12 @@ def cohort_update(cfg: ModelConfig, params: PyTree, stacked_trainable: PyTree,
     sequentially *inside* one computation — the fallback for memory-tight
     configs.
 
+    The kernel implementations inside the compiled step follow
+    ``cfg.kernels`` (``repro.kernels.backend``): with
+    ``KernelConfig(backend="pallas")`` the whole cohort trains on the
+    fused Pallas hot-path kernels; reference-vs-pallas parity of this
+    exact entry point is CI-enforced in tests/test_backend.py.
+
     Returns stacked ``(trainable, count_sums {pos: (C, n_periods, E)},
     token_counts (C,), loss_sums (C,), n_valid (C,))``.
     """

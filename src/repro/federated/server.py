@@ -192,8 +192,14 @@ class FederatedServer:
                                     out_tr["rescaler"], len(members))):
                     c.rescaler = r                       # persist s_i locally
 
-            loss_means = np.asarray(loss_sum) / np.maximum(
-                np.asarray(n_valid), 1.0)
+            # nan (not 0.0) for zero-valid-step clients — the looped
+            # reference path reports nan via local_train; the engines must
+            # agree on this edge case too
+            n_valid_np = np.asarray(n_valid)
+            loss_means = np.where(
+                n_valid_np > 0,
+                np.asarray(loss_sum) / np.maximum(n_valid_np, 1.0),
+                np.nan)
             for j, pos in enumerate(co.members):
                 losses_by_pos[pos] = float(loss_means[j])
                 freqs_by_pos[pos] = {p: np.asarray(f[j])

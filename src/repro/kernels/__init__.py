@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the FLAME hot paths (fused LoRA matmul, flash
+# attention, top-k routing) + their pure-jnp oracles (ref.py).
+#
+# Model code selects an implementation through `repro.kernels.backend`
+# (driven by `ModelConfig.kernels`); `ops.py` remains the thin manual
+# use_kernel=True/False dispatch for scripts and benchmarks.
+from . import backend, ops, ref  # noqa: F401

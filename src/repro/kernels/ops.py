@@ -58,9 +58,7 @@ def lora_matmul(x, w, a, b, *, scale: float = 1.0, use_kernel: bool = True,
 def lora_matmul_experts(x, w, a, b, *, scale: float = 1.0,
                         use_kernel: bool = True, interpret=None):
     if not use_kernel:
-        y = jnp.einsum("eck,ekn->ecn", x, w)
-        xa = jnp.einsum("eck,ekr->ecr", x, a)
-        return (y + jnp.einsum("ecr,ern->ecn", xa, b) * scale).astype(x.dtype)
+        return ref.lora_matmul_experts_ref(x, w, a, b, scale)
     interpret = default_interpret() if interpret is None else interpret
     return _lora_experts_pallas(x, w, a, b, scale=scale, interpret=interpret)
 

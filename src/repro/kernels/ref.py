@@ -45,6 +45,19 @@ def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
     return y.astype(x.dtype)
 
 
+def lora_matmul_experts_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                            b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Stacked per-expert oracle: x (E,C,K); w (E,K,N); a (E,K,r);
+    b (E,r,N) -> (E,C,N).  Same numerics contract as the kernel: all math
+    in fp32, one cast at the end."""
+    f32 = jnp.float32
+    xf, wf, af, bf = (t.astype(f32) for t in (x, w, a, b))
+    y = jnp.einsum("eck,ekn->ecn", xf, wf)
+    xa = jnp.einsum("eck,ekr->ecr", xf, af)
+    y = y + jnp.einsum("ecr,ern->ecn", xa, bf) * scale
+    return y.astype(x.dtype)
+
+
 def topk_router_ref(logits: jnp.ndarray, k: int):
     """logits: (T,E) -> (weights (T,E) fp32, mask (T,E) fp32, counts (E,)).
 

@@ -56,10 +56,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     variant = variant_for(arch, shape_name)
     cfg = get_config(arch, variant)
     if mesh_shape is not None:
-        import jax as _jax
-        mesh = _jax.make_mesh(
-            tuple(mesh_shape), ("data", "model"),
-            axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        from .mesh import make_mesh_compat
+        mesh = make_mesh_compat(tuple(mesh_shape), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)

@@ -1,11 +1,13 @@
 """Attention: GQA with RoPE, optional qk-norm, full-causal or sliding-window.
 
-Two execution paths:
+Two execution paths, selected per call by ``cfg.kernels`` through
+``repro.kernels.backend`` (dispatch rules in docs/kernels.md):
   * ``flash_attention_jnp`` — blockwise online-softmax attention written with
-    ``lax.scan`` so no (S, S) score tensor is ever materialised.  This is the
-    path used under jit/GSPMD (it lowers cleanly for the multi-pod dry-run)
-    and the CPU oracle for the Pallas kernel.
-  * ``repro.kernels.flash_attention`` — the Pallas TPU kernel (same math).
+    ``lax.scan`` so no (S, S) score tensor is ever materialised.  The
+    reference backend, the GSPMD dry-run path, and the fallback for
+    logit-softcap models and single-token decode.
+  * ``repro.kernels.flash_attention`` — the Pallas TPU kernel (same math),
+    used on the pallas backend (interpret mode off-TPU).
 
 Sliding-window attention fetches only the KV span each query block can see
 (``lax.dynamic_slice``), making long-context prefill genuinely sub-quadratic.
@@ -18,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import backend as kernel_backend
 from .layers import apply_rope, lora_dense, rms_norm, softcap
 
 NEG_INF = -1e30
@@ -214,9 +217,9 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
     hd = cfg.head_dim_
     lg = lora or {}
 
-    q = lora_dense(x, p["wq"], lg.get("wq"), lora_scale)
-    k = lora_dense(x, p["wk"], lg.get("wk"), lora_scale)
-    v = lora_dense(x, p["wv"], lg.get("wv"), lora_scale)
+    q = lora_dense(x, p["wq"], lg.get("wq"), lora_scale, kernels=cfg.kernels)
+    k = lora_dense(x, p["wk"], lg.get("wk"), lora_scale, kernels=cfg.kernels)
+    v = lora_dense(x, p["wv"], lg.get("wv"), lora_scale, kernels=cfg.kernels)
     q = q.reshape(B, S, cfg.n_heads, hd)
     k = k.reshape(B, S, cfg.n_kv_heads, hd)
     v = v.reshape(B, S, cfg.n_kv_heads, hd)
@@ -240,9 +243,21 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                                logit_softcap=cfg.attn_logit_softcap)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        out = flash_attention_jnp(
-            q, k, v, causal=True, window=cfg.attention_window,
-            logit_softcap=cfg.attn_logit_softcap)
+        # backend dispatch (docs/kernels.md): the Pallas flash kernel when
+        # selected and applicable; logit-softcap models fall back to the
+        # blockwise jnp path (the kernel does not implement softcap), as
+        # do the decode branch above (single-token attention) and
+        # degenerate-block sequence lengths.
+        if (kernel_backend.use_pallas(cfg.kernels)
+                and cfg.attn_logit_softcap == 0.0
+                and kernel_backend.flash_blocks_ok(S)):
+            out = kernel_backend.flash_attention(
+                cfg.kernels, q, k, v, causal=True,
+                window=cfg.attention_window)
+        else:
+            out = flash_attention_jnp(
+                q, k, v, causal=True, window=cfg.attention_window,
+                logit_softcap=cfg.attn_logit_softcap)
         if return_cache:
             w = cfg.attention_window
             if w > 0 and S >= w:
@@ -259,5 +274,6 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                 new_cache = {"k": k, "v": v}
 
     out = out.reshape(B, S, cfg.n_heads * hd)
-    out = lora_dense(out, p["wo"], lg.get("wo"), lora_scale)
+    out = lora_dense(out, p["wo"], lg.get("wo"), lora_scale,
+                     kernels=cfg.kernels)
     return out, new_cache

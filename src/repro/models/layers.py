@@ -72,14 +72,26 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
 # --------------------------------------------------------------------------
 
 def lora_dense(x: jnp.ndarray, w: jnp.ndarray,
-               lp: Optional[dict], scale: float) -> jnp.ndarray:
+               lp: Optional[dict], scale: float,
+               kernels=None) -> jnp.ndarray:
     """y = x @ W (+ (x @ A) @ B * scale when a LoRA adapter is present).
 
     ``x``: (..., d_in); ``w``: (d_in, d_out); ``lp``: {"a": (d_in, r),
     "b": (r, d_out)} or None.  The LoRA bypass is computed in the weight
     dtype; correction is added unmerged (the federated protocol keeps
     A/B separate so the server can aggregate them).
+
+    On the pallas path (``kernels``, a KernelConfig) an adapter-carrying
+    projection runs the fused ``repro.kernels.lora_matmul`` kernel over the
+    flattened token dim.
     """
+    if lp is not None:
+        from ..kernels import backend as kernel_backend
+        if kernel_backend.use_pallas(kernels):
+            xf = x.reshape(-1, x.shape[-1])
+            y = kernel_backend.lora_matmul(kernels, xf, w, lp["a"],
+                                           lp["b"], scale=scale)
+            return y.reshape(x.shape[:-1] + (w.shape[-1],))
     y = x @ w
     if lp is not None:
         y = y + ((x @ lp["a"]) @ lp["b"]) * jnp.asarray(scale, y.dtype)
@@ -87,25 +99,51 @@ def lora_dense(x: jnp.ndarray, w: jnp.ndarray,
 
 
 def lora_expert_einsum(x: jnp.ndarray, w: jnp.ndarray,
-                       lp: Optional[dict], scale: float) -> jnp.ndarray:
+                       lp: Optional[dict], scale: float,
+                       kernels=None) -> jnp.ndarray:
     """Per-expert matmul over stacked expert weights.
 
     ``x``: (E, C, d_in) or grouped (G, E, C, d_in) expert-major token slots;
     ``w``: (E, d_in, d_out);
     ``lp``: {"a": (E, d_in, r), "b": (E, r, d_out)} or None.
+
+    ``kernels`` (a :class:`repro.configs.base.KernelConfig`) selects the
+    implementation: on the pallas path an adapter-carrying matmul runs the
+    fused ``repro.kernels.lora_matmul.lora_matmul_experts`` kernel (base +
+    LoRA bypass in one VMEM pass).  The reference path and the no-adapter
+    case use plain einsums — both accumulate in fp32 and cast once, the
+    same numerics contract as the kernel.
     """
+    from ..kernels import backend as kernel_backend
+    from ..kernels import ref as kernel_ref
+
+    if lp is not None and x.ndim == 3:
+        if kernel_backend.use_pallas(kernels):
+            return kernel_backend.lora_matmul_experts(
+                kernels, x, w, lp["a"], lp["b"], scale=scale)
+        return kernel_ref.lora_matmul_experts_ref(x, w, lp["a"], lp["b"],
+                                                  scale)
+
+    f32 = jnp.float32
     if x.ndim == 4:
-        y = jnp.einsum("geci,eio->geco", x, w)
+        # grouped path: keep the G axis un-reshaped in the reference
+        # einsums — G is the data-sharded routing-group dim and GSPMD must
+        # see it intact (the pallas fold below is a per-device kernel view)
+        if lp is not None and kernel_backend.use_pallas(kernels):
+            G, E, C, K = x.shape
+            xt = jnp.swapaxes(x, 0, 1).reshape(E, G * C, K)
+            y = kernel_backend.lora_matmul_experts(
+                kernels, xt, w, lp["a"], lp["b"], scale=scale)
+            return jnp.swapaxes(y.reshape(E, G, C, -1), 0, 1)
+        y = jnp.einsum("geci,eio->geco", x, w, preferred_element_type=f32)
         if lp is not None:
-            xa = jnp.einsum("geci,eir->gecr", x, lp["a"])
-            y = y + (jnp.einsum("gecr,ero->geco", xa, lp["b"])
-                     * jnp.asarray(scale, y.dtype))
-        return y
-    y = jnp.einsum("eci,eio->eco", x, w)
-    if lp is not None:
-        xa = jnp.einsum("eci,eir->ecr", x, lp["a"])
-        y = y + jnp.einsum("ecr,ero->eco", xa, lp["b"]) * jnp.asarray(scale, y.dtype)
-    return y
+            xa = jnp.einsum("geci,eir->gecr", x, lp["a"],
+                            preferred_element_type=f32)
+            y = y + jnp.einsum("gecr,ero->geco", xa, lp["b"],
+                               preferred_element_type=f32) * scale
+        return y.astype(x.dtype)
+    y = jnp.einsum("eci,eio->eco", x, w, preferred_element_type=f32)
+    return y.astype(x.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -122,12 +160,12 @@ def init_ffn(key, d_model: int, d_ff: int, dtype) -> dict:
 
 
 def apply_ffn(p: dict, x: jnp.ndarray, lora: Optional[dict] = None,
-              lora_scale: float = 0.0) -> jnp.ndarray:
+              lora_scale: float = 0.0, kernels=None) -> jnp.ndarray:
     lg = (lora or {})
-    gate = lora_dense(x, p["w1"], lg.get("w1"), lora_scale)
-    up = lora_dense(x, p["w3"], lg.get("w3"), lora_scale)
+    gate = lora_dense(x, p["w1"], lg.get("w1"), lora_scale, kernels=kernels)
+    up = lora_dense(x, p["w3"], lg.get("w3"), lora_scale, kernels=kernels)
     h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
-    return lora_dense(h, p["w2"], lg.get("w2"), lora_scale)
+    return lora_dense(h, p["w2"], lg.get("w2"), lora_scale, kernels=kernels)
 
 
 # --------------------------------------------------------------------------

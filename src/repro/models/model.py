@@ -173,7 +173,8 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
         h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
         if inner_act_fn is not None:
             h2 = inner_act_fn(h2)
-        h2 = apply_ffn(p["ffn"], h2, lg.get("ffn"), lora_scale)
+        h2 = apply_ffn(p["ffn"], h2, lg.get("ffn"), lora_scale,
+                       kernels=cfg.kernels)
         x = _reshard(x + h2)
     return x, aux, (new_cache if new_cache else None)
 

@@ -27,6 +27,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import backend as kernel_backend
 from .layers import dense_init, lora_expert_einsum
 
 
@@ -74,17 +75,13 @@ def topk_routing(router_logits: jnp.ndarray, k: int):
     router_logits: (T, E).  Returns (weights (T,E), mask (T,E)) where mask is
     the 0/1 selection and weights are the softmax probs of the selected
     experts renormalised to sum to 1 per token.
+
+    Delegates to ``repro.kernels.ref.topk_router_ref`` — the single source
+    of truth for routing semantics (the Pallas router kernel is validated
+    against the same oracle).
     """
-    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
-    masked = probs
-    mask = jnp.zeros_like(probs)
-    for _ in range(k):
-        idx = jnp.argmax(masked, axis=-1)
-        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
-        mask = mask + onehot
-        masked = masked * (1.0 - onehot)
-    weights = probs * mask
-    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    from ..kernels.ref import topk_router_ref
+    weights, mask, _ = topk_router_ref(router_logits, k)
     return weights, mask
 
 
@@ -120,12 +117,13 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
     if not deterministic and m.router_jitter > 0 and rng is not None:
         logits = logits + m.router_jitter * jax.random.normal(
             rng, logits.shape, logits.dtype)
-    weights, mask = topk_routing(logits.reshape(T, E), k)         # (T, E) fp32
+    # backend-dispatched fused router (softmax + top-k + the FLAME Eq. 6
+    # activation counts); reference path = ref.topk_router_ref, whose
+    # routing semantics are identical to topk_routing below
+    weights, mask, counts = kernel_backend.router(
+        cfg.kernels, logits.reshape(T, E), k)                     # (T, E) fp32
     weights = weights.reshape(G, Tg, E)
     mask = mask.reshape(G, Tg, E)
-
-    # ----- activation statistics (FLAME Eq. 6 numerator) -----
-    counts = mask.sum(axis=(0, 1))                                # (E,)
     # Switch-style load-balance aux loss (kept for completeness; the paper
     # fine-tunes with the router frozen so this is usually unused).
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
@@ -159,13 +157,16 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
         slots = sf["slots"](slots)
 
     # ----- expert FFN (SwiGLU) with per-expert LoRA -----
+    # kernels=cfg.kernels: on the pallas backend each matmul is the fused
+    # base+bypass lora_matmul_experts kernel (docs/kernels.md)
     le = (lora or {}).get("experts", {})
     gate = lora_expert_einsum(slots, p["experts"]["w1"], le.get("w1"),
-                              lora_scale)
+                              lora_scale, kernels=cfg.kernels)
     up = lora_expert_einsum(slots, p["experts"]["w3"], le.get("w3"),
-                            lora_scale)
+                            lora_scale, kernels=cfg.kernels)
     h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
-    eo = lora_expert_einsum(h, p["experts"]["w2"], le.get("w2"), lora_scale)
+    eo = lora_expert_einsum(h, p["experts"]["w2"], le.get("w2"), lora_scale,
+                            kernels=cfg.kernels)
 
     eo = sf["slots"](eo) if "slots" in sf else eo
     out = jnp.einsum("gtec,gecd->gtd", combine, eo)               # (G, Tg, D)
@@ -179,7 +180,8 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
     if "shared" in p:
         from .layers import apply_ffn
         ls = (lora or {}).get("shared")
-        out = out + apply_ffn(p["shared"], xg, ls, lora_scale)
+        out = out + apply_ffn(p["shared"], xg, ls, lora_scale,
+                              kernels=cfg.kernels)
 
     aux = MoEAux(activation_counts=counts,
                  total_tokens=jnp.asarray(T, jnp.float32),

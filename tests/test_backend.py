@@ -1,0 +1,277 @@
+"""Kernel-backend parity: ``backend="pallas", interpret=True`` must match
+``backend="reference"`` through the full model — forward losses, gradients,
+activation counts, and a whole federated ``cohort_update`` training step
+(ISSUE 2 acceptance: rtol 1e-3 bf16 / 1e-5 fp32).
+
+The pallas ops are ``jax.custom_vjp``-wrapped (Pallas has no autodiff rule),
+so gradient parity here is what certifies the hand-written backward formulas
+in ``repro.kernels.backend``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from repro.configs.base import KernelConfig, TrainConfig
+from repro.core import lora as lora_lib
+from repro.federated import client as client_lib
+from repro.kernels import backend as kb
+from repro.kernels import ref
+from repro.models import model as model_lib
+
+REFERENCE = KernelConfig(backend="reference")
+PALLAS = KernelConfig(backend="pallas", interpret=True)
+
+
+def _tol(dtype):
+    # bf16 atol = one bf16 ulp at unit scale: primal activations round to
+    # bf16 at the same program points on both backends, but fp32 summation
+    # -order differences occasionally flip a rounding boundary, leaving
+    # few-ulp noise on downstream gradients.  rtol follows the ISSUE 2
+    # acceptance spec (1e-3 bf16 / 1e-5 fp32).
+    return dict(rtol=1e-3, atol=4e-3) if dtype == "bfloat16" else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+def _assert_trees_close(a, b, **tol):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   err_msg=str(path), **tol)
+
+
+def _loss_and_grad(cfg, params, trainable, tokens, labels, mask, k):
+    def f(tr):
+        return model_lib.lm_loss(cfg, params, tokens, labels, mask,
+                                 trainable=tr, k=k)
+
+    return jax.value_and_grad(f, has_aux=True)(trainable)
+
+
+def _setup(cfg, seed=0, batch=2, seq=16):
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.init_params(key, cfg)
+    lora = lora_lib.init_lora(jax.random.fold_in(key, 1), cfg, params)
+    resc = lora_lib.init_rescalers(cfg, 1) if cfg.moe.enabled else None
+    trainable = lora_lib.make_trainable(lora, resc)
+    tokens = jax.random.randint(jax.random.fold_in(key, 2), (batch, seq),
+                                0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32)
+    return params, trainable, tokens, labels, mask
+
+
+# ---------------------------------------------------------------- resolution
+
+def test_auto_backend_resolves_to_reference_off_tpu():
+    assert kb.resolve(KernelConfig()) == "reference"
+    assert kb.resolve(None) == "reference"
+    assert kb.resolve(PALLAS) == "pallas"
+    assert kb.resolve_interpret(KernelConfig(backend="pallas")) is True
+
+
+# ---------------------------------------------------------- op-level parity
+
+@pytest.mark.parametrize("rank", [2, 8, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul_backend_parity_ranks_dtypes(rank, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 96), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (96, 80), dtype)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (96, rank), dtype) * .1
+    b = jax.random.normal(jax.random.fold_in(key, 3), (rank, 80), dtype) * .1
+
+    def run(kcfg):
+        def f(x, w, a, b):
+            return kb.lora_matmul(kcfg, x, w, a, b, scale=0.5).astype(
+                jnp.float32).sum()
+        val, grads = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(x, w, a, b)
+        return val, grads
+
+    v_ref, g_ref = run(REFERENCE)
+    v_pal, g_pal = run(PALLAS)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(v_ref), float(v_pal), rtol=1e-3)
+    for gr, gp in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(gr, np.float32),
+                                   np.asarray(gp, np.float32), **tol)
+
+
+def test_flash_attention_backend_grad_parity():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+    from repro.models.attention import flash_attention_jnp
+
+    def f_pal(q, k, v):
+        return kb.flash_attention(PALLAS, q, k, v).sum()
+
+    def f_ref(q, k, v):
+        return flash_attention_jnp(q, k, v, causal=True).sum()
+
+    g_pal = jax.grad(f_pal, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_pal, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_router_backend_parity_and_grads():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (128, 8))
+
+    def wsum(kcfg):
+        return lambda l: kb.router(kcfg, l, 2)[0].sum()
+
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.asarray(kb.router(PALLAS, logits, 2)[i]),
+            np.asarray(kb.router(REFERENCE, logits, 2)[i]),
+            rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jax.grad(wsum(PALLAS))(logits)),
+                               np.asarray(jax.grad(wsum(REFERENCE))(logits)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_degenerate_block_shapes_fall_back_to_reference():
+    """Prime dims above the block target would give near-1-wide Pallas
+    grids — the dispatch layer must fall back to the reference instead."""
+    assert not kb.flash_blocks_ok(509)       # prime > 128
+    assert kb.flash_blocks_ok(512)
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (509, 64))    # M prime > 256 -> fallback
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (64, 4))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (4, 64))
+    np.testing.assert_array_equal(
+        np.asarray(kb.lora_matmul(PALLAS, x, w, a, b, scale=0.5)),
+        np.asarray(kb.lora_matmul(REFERENCE, x, w, a, b, scale=0.5)))
+
+
+# ------------------------------------------------------- model-level parity
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("rank", [2, 8])
+def test_moe_model_loss_and_grad_parity(dtype, rank):
+    """Budget-restricted k_i=1 < top_k=2 on the tiny MoE, across dtypes and
+    LoRA ranks: losses, grads and activation counts must agree."""
+    import repro.configs.base as cb
+    cfg = tiny_moe(dtype=dtype, lora=cb.LoRAConfig(rank=rank))
+    params, trainable, tokens, labels, mask = _setup(cfg)
+    (l_ref, c_ref), g_ref = _loss_and_grad(
+        cfg.replace(kernels=REFERENCE), params, trainable, tokens, labels,
+        mask, k=1)
+    (l_pal, c_pal), g_pal = _loss_and_grad(
+        cfg.replace(kernels=PALLAS), params, trainable, tokens, labels,
+        mask, k=1)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(float(l_ref), float(l_pal),
+                               rtol=tol["rtol"])
+    _assert_trees_close(g_ref, g_pal, **tol)
+    for pos in c_ref:
+        np.testing.assert_allclose(np.asarray(c_ref[pos]),
+                                   np.asarray(c_pal[pos]))
+
+
+def test_dense_model_parity_uses_attention_kernel():
+    """The dense family exercises the flash-attention dispatch (no MoE)."""
+    cfg = tiny_dense()
+    params, trainable, tokens, labels, mask = _setup(cfg)
+    (l_ref, _), g_ref = _loss_and_grad(
+        cfg.replace(kernels=REFERENCE), params, trainable, tokens, labels,
+        mask, k=None)
+    (l_pal, _), g_pal = _loss_and_grad(
+        cfg.replace(kernels=PALLAS), params, trainable, tokens, labels,
+        mask, k=None)
+    np.testing.assert_allclose(float(l_ref), float(l_pal), rtol=1e-5)
+    _assert_trees_close(g_ref, g_pal, rtol=1e-5, atol=1e-5)
+
+
+def test_softcap_models_fall_back_to_jnp_path():
+    """attn_logit_softcap > 0 must route to the blockwise jnp path even on
+    the pallas backend (the kernel has no softcap) — outputs identical."""
+    cfg = tiny_dense(attn_logit_softcap=30.0)
+    params, trainable, tokens, labels, mask = _setup(cfg)
+    (l_ref, _), _ = _loss_and_grad(cfg.replace(kernels=REFERENCE), params,
+                                   trainable, tokens, labels, mask, k=None)
+    (l_pal, _), _ = _loss_and_grad(cfg.replace(kernels=PALLAS), params,
+                                   trainable, tokens, labels, mask, k=None)
+    assert float(l_ref) == float(l_pal)
+
+
+# ------------------------------------------- cohort training step (the CI
+# acceptance contract: a full federated training step, both backends)
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_cohort_update_full_step_parity(dtype):
+    cfg = tiny_moe(dtype=dtype)
+    tc = TrainConfig(batch_size=2, local_epochs=1, seq_len=16)
+    key = jax.random.PRNGKey(3)
+    params = model_lib.init_params(key, cfg)
+    lora = lora_lib.init_lora(jax.random.fold_in(key, 1), cfg, params)
+
+    # two clients, shared shapes (one cohort), budget k_i=1 < top_k=2
+    n_ex, seq = 6, 16
+    trainables, plans = [], []
+    from repro.data.synthetic import Corpus
+    for cid in range(2):
+        ck = jax.random.fold_in(key, 10 + cid)
+        toks = np.asarray(jax.random.randint(ck, (n_ex, seq), 0,
+                                             cfg.vocab_size), np.int32)
+        shard = Corpus(tokens=toks, labels=np.roll(toks, -1, 1),
+                       mask=np.ones((n_ex, seq), np.float32),
+                       clusters=np.zeros((n_ex,), np.int32))
+        client = client_lib.ClientState(client_id=cid, shard=shard, k=1,
+                                        rank=cfg.lora.rank,
+                                        rescaler=lora_lib.init_rescalers(
+                                            cfg, 1))
+        trainables.append(lora_lib.make_trainable(lora, client.rescaler))
+        plans.append(client_lib.make_batch_plan(client, tc, round_seed=5))
+
+    stacked_tr = lora_lib.stack_adapters(trainables)
+    plan = client_lib.stack_plans(plans)
+    args = (jnp.asarray(plan.tokens), jnp.asarray(plan.labels),
+            jnp.asarray(plan.mask), jnp.asarray(plan.valid))
+
+    def run(kcfg):
+        return client_lib.cohort_update(
+            cfg.replace(kernels=kcfg), params, stacked_tr, *args, k=1,
+            tc=tc, rescaler_trainable=True)
+
+    tr_ref, counts_ref, tok_ref, loss_ref, n_ref = run(REFERENCE)
+    tr_pal, counts_pal, tok_pal, loss_pal, n_pal = run(PALLAS)
+
+    tol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(loss_ref), np.asarray(loss_pal),
+                               rtol=tol["rtol"], atol=tol["atol"])
+    _assert_trees_close(tr_ref, tr_pal, **tol)
+    _assert_trees_close(counts_ref, counts_pal, **tol)
+    np.testing.assert_allclose(np.asarray(tok_ref), np.asarray(tok_pal))
+    np.testing.assert_allclose(np.asarray(n_ref), np.asarray(n_pal))
+
+    # and per-step gradients of the same cohort loss agree (the "gradients"
+    # half of the acceptance criterion, at the cohort level)
+    def cohort_loss(kcfg):
+        def f(tr):
+            c2 = cfg.replace(kernels=kcfg)
+
+            def one(tr1, tok, lab, msk):
+                loss, _ = model_lib.lm_loss(c2, params, tok, lab, msk,
+                                            trainable=tr1, k=1)
+                return loss
+
+            return jax.vmap(one)(tr, args[0][:, 0], args[1][:, 0],
+                                 args[2][:, 0]).sum()
+
+        return f
+
+    g_ref = jax.grad(cohort_loss(REFERENCE))(stacked_tr)
+    g_pal = jax.grad(cohort_loss(PALLAS))(stacked_tr)
+    _assert_trees_close(g_ref, g_pal, **tol)

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""CHANGES.md discipline check (`make ci` / the changes-entry CI job).
+
+Two modes:
+
+* ``--base REF`` (pull-request CI): every PR must carry its CHANGES.md
+  entry — fail unless CHANGES.md differs between ``REF`` and HEAD.
+* no arguments (local ``make ci``): fail on *uncommitted* CHANGES.md
+  drift — the entry must be part of the commit under test, not sitting
+  dirty in the working tree where the pushed PR would silently miss it.
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+
+
+def _git(*args: str) -> str:
+    return subprocess.run(["git", *args], check=True, capture_output=True,
+                          text=True).stdout
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="changes_check")
+    ap.add_argument("--base", metavar="REF",
+                    help="require a CHANGES.md diff vs the merge-base "
+                         "with REF (pull-request mode)")
+    ns = ap.parse_args(argv)
+
+    if ns.base:
+        base = _git("merge-base", ns.base, "HEAD").strip()
+        changed = _git("diff", "--name-only", base, "HEAD",
+                       "--", "CHANGES.md").strip()
+        if not changed:
+            print(f"FAIL changes-check: no CHANGES.md entry in this PR "
+                  f"(diff vs {ns.base} is empty) — append one line "
+                  f"describing the change")
+            return 1
+        print("changes-check: OK (CHANGES.md updated in this PR)")
+        return 0
+
+    dirty = _git("status", "--porcelain", "--", "CHANGES.md").strip()
+    if dirty:
+        print("FAIL changes-check: CHANGES.md has uncommitted drift "
+              f"({dirty!r}) — commit the entry with the change")
+        return 1
+    print("changes-check: OK (no uncommitted CHANGES.md drift)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
