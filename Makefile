@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-round bench-smoke docs-check changes-check ci
+.PHONY: test bench bench-round bench-serve bench-smoke docs-check changes-check ci
 
 # tier-1 verification (see ROADMAP.md)
 test:
@@ -18,7 +18,11 @@ bench:
 bench-round:
 	$(PYTHON) -m benchmarks.run round_engine
 
-# the fast CI subset (kernel micro-bench + end-to-end backend bench),
+# serving engine: continuous batching vs sequential + per-slot adaptive k
+bench-serve:
+	$(PYTHON) -m benchmarks.run serving
+
+# the fast CI subset (kernel micro-bench + backend bench + serving smoke),
 # JSON results written to bench-smoke.json (the CI artifact)
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --smoke --out bench-smoke.json

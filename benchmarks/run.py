@@ -15,11 +15,12 @@ paper's directional claims.  Roofline numbers live in EXPERIMENTS.md
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import time
 
 from . import (backend_bench, common, fig2_activation, fig3_temperature,
-               kernel_bench, round_engine_bench, table1_flops,
+               kernel_bench, round_engine_bench, serving_bench, table1_flops,
                table2_budgets, table3_scale, table4_sampling, table5_rescaler)
 
 ALL = {
@@ -33,10 +34,11 @@ ALL = {
     "kernels": kernel_bench.run,
     "backend": backend_bench.run,
     "round_engine": round_engine_bench.run,
+    "serving": serving_bench.run,
 }
 
 # CPU-fast subset for CI (`--smoke`): no pretraining, no federated rounds
-SMOKE = ["kernels", "backend"]
+SMOKE = ["kernels", "backend", "serving"]
 
 
 def main(argv=None) -> None:
@@ -55,7 +57,11 @@ def main(argv=None) -> None:
             raise SystemExit(f"unknown benchmark {name!r}; "
                              f"choose from {list(ALL)}")
         t = time.time()
-        ALL[name]()
+        fn = ALL[name]
+        # benchmarks that can scale themselves down take smoke=True
+        kw = ({"smoke": True} if ns.smoke
+              and "smoke" in inspect.signature(fn).parameters else {})
+        fn(**kw)
         print(f"# [{name}] done in {time.time() - t:.1f}s", flush=True)
     wall = time.time() - t0
     print(f"\n# all benchmarks done in {wall:.1f}s")

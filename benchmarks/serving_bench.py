@@ -1,0 +1,188 @@
+"""Serving-engine benchmark: continuous batching + per-slot adaptive k.
+
+Two claims, measured on the bench MoE config (2L, d_model 128, 8 experts
+top-4) with greedy decode on this host's devices:
+
+  1. **Continuous batching wins**: serving N>=8 concurrent requests
+     through the engine's slotted decode beats the sequential
+     per-request prefill+decode loop (the pre-engine launch/serve.py
+     path) in requests/sec.
+  2. **Per-slot k is cheaper**: on the same 8-slot mixed batch, slots
+     decoding at k=1 shrink the MoE dispatch capacity (it follows
+     sum(slot_k)), so the compiled step is measurably faster than the
+     all-full-k step.
+
+Steady-state numbers: each configuration is warmed up first so compile
+time is excluded.  Emits the usual CSV rows (into the ``--out`` JSON
+artifact) plus ``# CLAIM`` / ``# BENCH JSON`` summary lines.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.moe_layer import _capacity_from_assignments
+from repro.serving import Request, ServingEngine, WorkloadConfig, make_trace
+
+from .common import bench_model, emit
+
+
+def _requests(cfg, n, prompt_len, new_tokens, k=None, seed=0):
+    trace = make_trace(WorkloadConfig(
+        n_requests=n, prompt_lens=(prompt_len,), new_tokens=(new_tokens,),
+        vocab_size=cfg.vocab_size, seed=seed))
+    if k is not None:
+        for r in trace:
+            r.k = k
+    return trace
+
+
+def _sequential_wall(cfg, params, requests, slot_len: int) -> float:
+    """The pre-engine serving path: one request at a time, batch 1 —
+    jitted prefill + jitted cache-donating decode, so the comparison
+    isolates BATCHING, not compilation artefacts."""
+    import jax.numpy as jnp
+    k = cfg.moe.top_k
+
+    prefill = jax.jit(lambda p, toks: model_lib.prefill(
+        cfg, p, toks, k=k, cache_len=slot_len))
+    decode = jax.jit(
+        lambda p, c, t, pos: model_lib.decode_step(cfg, p, c, t, pos, k=k),
+        donate_argnums=(1,))
+
+    def serve_one(req):
+        logits, cache = prefill(params, jnp.asarray(req.prompt[None]))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(req.max_new_tokens - 1):
+            logits, cache = decode(params, cache, tok,
+                                   req.prompt_len + i)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok
+
+    serve_one(requests[0]).block_until_ready()          # compile warmup
+    t0 = time.perf_counter()
+    for req in requests:
+        serve_one(req).block_until_ready()
+    return time.perf_counter() - t0
+
+
+def _engine_report(cfg, params, requests, *, num_slots, slot_len,
+                   slot_k=None):
+    """Warmed-up engine run (a first run compiles prefill + decode)."""
+    engine = ServingEngine(cfg, params, num_slots=num_slots,
+                           slot_len=slot_len, slot_k=slot_k)
+    warm = [Request(rid=-1 - s, prompt=requests[0].prompt,
+                    max_new_tokens=2, k=engine.slot_k[s])
+            for s in range(num_slots)]
+    engine.run(warm)
+    reqs = [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, k=r.k,
+                    arrival=r.arrival) for r in requests]
+    return engine.run(reqs)
+
+
+def run(smoke: bool = False) -> None:
+    cfg = bench_model(moe=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    top_k = cfg.moe.top_k
+    n_req = 16 if smoke else 32
+    new_tokens = 8 if smoke else 16
+    prompt_len = 16
+    num_slots = 8
+    slot_len = prompt_len + new_tokens
+
+    # ---- 1. continuous batching vs the sequential per-request loop ----
+    reqs = _requests(cfg, n_req, prompt_len, new_tokens, k=top_k)
+    seq_wall = _sequential_wall(cfg, params, reqs, slot_len)
+    report = _engine_report(cfg, params, reqs, num_slots=num_slots,
+                            slot_len=slot_len)
+    s = report.summary()
+    rows = [
+        {"mode": "sequential", "slots": 1, "requests": n_req,
+         "req_per_s": n_req / seq_wall, "gen_tok_per_s":
+             n_req * new_tokens / seq_wall,
+         "ttft_p95_ms": float("nan"), "latency_p95_ms": seq_wall / n_req
+         * 1e3},
+        {"mode": "engine", "slots": num_slots, "requests": n_req,
+         "req_per_s": s["requests_per_s"],
+         "gen_tok_per_s": s["gen_tokens_per_s"],
+         "ttft_p95_ms": s["ttft_p95_ms"],
+         "latency_p95_ms": s["latency_p95_ms"]},
+    ]
+    emit("serving_throughput", rows,
+         ["mode", "slots", "requests", "req_per_s", "gen_tok_per_s",
+          "ttft_p95_ms", "latency_p95_ms"])
+    speedup = s["requests_per_s"] / (n_req / seq_wall)
+    print(f"# CLAIM serving: continuous batching {speedup:.2f}x requests/s "
+          f"vs sequential decode ({n_req} requests, {num_slots} slots)")
+
+    # ---- 2. per-slot adaptive k: step time follows sum(slot_k) ----
+    # Run the comparison at a pool size where the dispatch capacity
+    # C = ceil(sum(slot_k)·cf / E) clears its 8-slot lane floor — below
+    # ~32 concurrent tokens the floor hides the effect at bench scale.
+    k_slots = 32 if smoke else 64
+    E, factor = cfg.moe.num_experts, cfg.moe.capacity_factor
+    configs = [("full_k", (top_k,) * k_slots),
+               ("mixed", (top_k,) * (k_slots // 2)
+                + (1,) * (k_slots - k_slots // 2)),
+               ("k1", (1,) * k_slots)]
+    k_rows = []
+    step_ms = {}
+    for name, slot_k in configs:
+        kreqs = [Request(rid=i, prompt=reqs[i % n_req].prompt,
+                         max_new_tokens=new_tokens, k=slot_k[i])
+                 for i in range(k_slots)]
+        rep = _engine_report(cfg, params, kreqs, num_slots=k_slots,
+                             slot_len=slot_len, slot_k=slot_k)
+        # steady-state step: min over the run's steps (the median absorbs
+        # host-side scheduling noise between steps)
+        ms = float(np.min(rep.decode_step_s)) * 1e3
+        step_ms[name] = ms
+        k_rows.append({"slot_k": name, "slots": k_slots,
+                       "sum_k": sum(slot_k),
+                       "capacity": _capacity_from_assignments(
+                           sum(slot_k), E, factor),
+                       "decode_step_ms": ms,
+                       "gen_tok_per_s": rep.summary()["gen_tokens_per_s"]})
+    emit("serving_adaptive_k", k_rows,
+         ["slot_k", "slots", "sum_k", "capacity", "decode_step_ms",
+          "gen_tok_per_s"])
+    k_speed = step_ms["full_k"] / max(step_ms["k1"], 1e-9)
+    print(f"# CLAIM serving: k=1 slots cut the decode step to "
+          f"{step_ms['k1']:.2f} ms vs {step_ms['full_k']:.2f} ms at full k "
+          f"({k_speed:.2f}x) on the same {k_slots}-slot batch")
+    print("# BENCH JSON: " + json.dumps(
+        {"bench": "serving", "requests": n_req, "slots": num_slots,
+         "seq_req_per_s": n_req / seq_wall,
+         "engine_req_per_s": s["requests_per_s"],
+         "batching_speedup": speedup,
+         "decode_step_ms": step_ms,
+         "adaptive_k_step_speedup": k_speed}))
+
+    if not smoke:
+        # ---- open-loop Poisson trace with a premium/economy tier mix ----
+        wl = WorkloadConfig(
+            n_requests=2 * n_req, rate=50.0, prompt_lens=(8, 16),
+            new_tokens=(8, 16), vocab_size=cfg.vocab_size,
+            tier_mix=((top_k, 0.5), (1, 0.5)), seed=1)
+        slot_k = (top_k,) * (num_slots // 2) + (1,) * (num_slots // 2)
+        rep = _engine_report(cfg, params, make_trace(wl),
+                             num_slots=num_slots, slot_len=slot_len,
+                             slot_k=slot_k)
+        o = rep.summary()
+        emit("serving_open_loop",
+             [{"rate_req_s": 50.0, "requests": 2 * n_req,
+               "req_per_s": o["requests_per_s"],
+               "ttft_p50_ms": o["ttft_p50_ms"],
+               "ttft_p95_ms": o["ttft_p95_ms"],
+               "latency_p95_ms": o["latency_p95_ms"]}],
+             ["rate_req_s", "requests", "req_per_s", "ttft_p50_ms",
+              "ttft_p95_ms", "latency_p95_ms"])
+
+
+if __name__ == "__main__":
+    run()

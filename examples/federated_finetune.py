@@ -18,7 +18,6 @@ import time
 
 import numpy as np
 
-from repro.checkpoint import io as ckpt
 from repro.configs.base import (FederatedConfig, LoRAConfig, MoEConfig,
                                 TrainConfig)
 from repro.configs.registry import get_config
@@ -75,9 +74,10 @@ def main() -> None:
     start_round = 0
     state_path = os.path.join(out, "state.npz")
     if args.resume and os.path.exists(state_path):
-        tree, meta = ckpt.load(state_path)
-        exp.server.global_lora = ckpt.to_device(tree["lora"])
-        start_round = int(meta["next_round"])
+        # server-side resume: restores the global LoRA, every client's
+        # local rescaler s_i, and replays the participant-sampling RNG so
+        # the continued run matches an uninterrupted one exactly
+        start_round = exp.server.restore_checkpoint(state_path)
         print(f"resumed at round {start_round} from {state_path}")
 
     init = evaluate(cfg, exp.server.params, None, exp.val,
@@ -94,8 +94,7 @@ def main() -> None:
         print(f"round {r}: mean client loss "
               f"{np.mean(res.client_losses):.4f} | global val {val:.4f} | "
               f"clients {res.participating} | {time.time() - t0:.1f}s")
-        ckpt.save(state_path, {"lora": exp.server.global_lora},
-                  meta={"next_round": r + 1, "method": args.method})
+        exp.server.save_checkpoint(state_path)
 
     test = evaluate(cfg, exp.server.params,
                     {"lora": exp.server.global_lora}, exp.test,

@@ -31,18 +31,30 @@ def dirichlet_partition(corpus: Corpus, num_clients: int, alpha: float,
             assignment[idx[start:start + cnt]] = client
             start += cnt
 
-    # guarantee a minimum shard size (a client with no data can't train)
+    # guarantee a minimum shard size (a client with no data can't train):
+    # repeatedly split off examples from the currently-largest donor.
+    # ``floor`` caps the guarantee at what the corpus can actually support;
+    # within that cap the loop always terminates with every client at or
+    # above the floor: whenever some client is short, the largest other
+    # shard must be strictly above the floor (otherwise the total would be
+    # < num_clients * floor <= len(corpus)), so each iteration moves >= 1
+    # example without pushing the donor below the floor.
+    floor = min(min_per_client, len(assignment) // num_clients)
     for client in range(num_clients):
-        have = np.where(assignment == client)[0]
-        if len(have) < min_per_client:
-            donors = np.argsort(-np.bincount(assignment,
-                                             minlength=num_clients))
-            for d in donors:
-                pool = np.where(assignment == d)[0]
-                need = min_per_client - len(have)
-                if len(pool) > min_per_client + need:
-                    assignment[pool[:need]] = client
-                    break
+        while True:
+            need = floor - int((assignment == client).sum())
+            if need <= 0:
+                break
+            sizes = np.bincount(assignment,
+                                minlength=num_clients).astype(np.int64)
+            sizes[client] = -1
+            donor = int(sizes.argmax())
+            pool = np.where(assignment == donor)[0]
+            give = min(need, len(pool) - floor)
+            assert give >= 1, (client, donor, sizes)
+            assignment[pool[:give]] = client
+    counts = np.bincount(assignment, minlength=num_clients)
+    assert counts.min() >= floor, (counts, floor)
 
     shards = []
     for client in range(num_clients):

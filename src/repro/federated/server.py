@@ -27,12 +27,13 @@ Round execution (``fed.round_engine``):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint import io as ckpt_io
 from ..configs.base import FederatedConfig, ModelConfig, TrainConfig
 from ..core import aggregation as agg
 from ..core import lora as lora_lib
@@ -69,6 +70,7 @@ class FederatedServer:
         self.tc = tc
         self.history: List[RoundResult] = []
         self._rng = np.random.default_rng(fed.seed + 999)
+        self._round_offset = 0        # rounds completed before a resume
 
     # ----------------------------------------------------------- distribution
     def _dist_rank(self, c: client_lib.ClientState) -> int:
@@ -239,5 +241,55 @@ class FederatedServer:
         self.history.append(res)
         return res
 
-    def run(self) -> List[RoundResult]:
-        return [self.run_round(r) for r in range(self.fed.rounds)]
+    # ------------------------------------------------------------ checkpoints
+    def save_checkpoint(self, path: str) -> None:
+        """Persist the round-resumable federated state: the global LoRA,
+        every client's local rescaler ``s_i`` (client-local state the
+        server would otherwise lose), and the next round index."""
+        ckpt_io.save(path, {"global_lora": self.global_lora,
+                            "rescalers": [c.rescaler for c in self.clients]},
+                     meta={"round_idx": self._round_offset + len(self.history),
+                           "method": self.fed.method,
+                           "num_clients": len(self.clients)})
+
+    def restore_checkpoint(self, path: str) -> int:
+        """Load a checkpoint into the server; returns the round to resume
+        from.  The participant-sampling RNG is replayed past the completed
+        rounds so a resumed run samples the same cohorts a straight-through
+        run would."""
+        tree, meta = ckpt_io.load(path)
+        if (meta is None or "num_clients" not in meta
+                or "global_lora" not in tree):
+            raise ValueError(
+                f"{path} is not a FederatedServer checkpoint (legacy or "
+                "foreign format) — re-create it with save_checkpoint / "
+                "run(checkpoint_to=...)")
+        assert meta["num_clients"] == len(self.clients), \
+            (meta["num_clients"], len(self.clients))
+        assert meta["method"] == self.fed.method, \
+            (meta["method"], self.fed.method)
+        self.global_lora = ckpt_io.to_device(tree["global_lora"])
+        for c, r in zip(self.clients, tree["rescalers"]):
+            c.rescaler = None if r is None else ckpt_io.to_device(r)
+        start = int(meta["round_idx"])
+        self._round_offset = start
+        for _ in range(start):
+            self._sample_participants()
+        return start
+
+    def run(self, resume_from: Optional[str] = None,
+            checkpoint_to: Optional[str] = None) -> List[RoundResult]:
+        """Run (the remaining) rounds.
+
+        ``resume_from``: checkpoint path written by :meth:`save_checkpoint`
+        (or by a previous ``run(checkpoint_to=...)``) — loads (global LoRA,
+        rescalers, round idx) and continues from there;
+        ``checkpoint_to``: write a checkpoint after every completed round.
+        """
+        start = self.restore_checkpoint(resume_from) if resume_from else 0
+        out = []
+        for r in range(start, self.fed.rounds):
+            out.append(self.run_round(r))
+            if checkpoint_to:
+                self.save_checkpoint(checkpoint_to)
+        return out

@@ -75,3 +75,32 @@ def topk_router_ref(logits: jnp.ndarray, k: int):
     weights = probs * mask
     weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
     return weights, mask, mask.sum(axis=0)
+
+
+def adaptive_topk_router_ref(logits: jnp.ndarray, k_tok: jnp.ndarray,
+                             max_k: int):
+    """Per-token-budget routing: token ``t`` activates its top ``k_tok[t]``
+    experts (FLAME's adaptive-k at serving time, per slot of a mixed batch).
+
+    logits: (T,E); k_tok: (T,) int with 0 <= k_tok[t] <= max_k (static;
+    ``k_tok`` itself may be traced — budget 0 deselects the token entirely,
+    which is how the serving engine masks free slots out of routing).
+    Returns (weights, mask, counts) with the same layout as
+    :func:`topk_router_ref`.  Because top-k selection is nested (the top-j
+    experts are a prefix of the top-(j+1) experts under the same argmax tie
+    break), truncating the ranked selection at ``k_tok[t]`` and
+    renormalising is *exactly* ``topk_router_ref(logits[t], k_tok[t])`` per
+    token — uniform ``k_tok == k`` reproduces the static router bit-for-bit.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    masked = probs
+    mask = jnp.zeros_like(probs)
+    take = k_tok.astype(jnp.int32)[:, None]
+    for rank in range(max_k):
+        idx = jnp.argmax(masked, axis=-1)
+        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        mask = mask + onehot * (rank < take)
+        masked = masked * (1.0 - onehot)
+    weights = probs * mask
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, mask, mask.sum(axis=0)

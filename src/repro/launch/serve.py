@@ -1,27 +1,60 @@
-"""Batched serving launcher (decode loop on the production mesh).
+"""Serving launcher: the continuous-batching engine on this host's devices.
 
-``--local`` runs a real prefill + autoregressive decode loop on this
-host's devices with a reduced config, demonstrating FLAME's reduced-k
-deployment; without ``--local`` it builds the sharded serve step for the
-production mesh (use repro.launch.dryrun in this offline container).
+``--local`` runs the adaptive-k serving engine (repro.serving) over a
+synthetic open-loop workload on a reduced config — a real request queue,
+slotted KV-cache pool, batched prefill and one compiled mixed-k decode
+step, reporting throughput and TTFT/latency percentiles; without
+``--local`` it builds the sharded serve step for the production mesh (use
+repro.launch.dryrun in this offline container).
 
   PYTHONPATH=src python -m repro.launch.serve --local \
-      --arch olmoe-1.3b-6.9b --k 1 --new-tokens 8
+      --arch olmoe-1.3b-6.9b --slots 8 --mix 8:0.5,1:0.5 \
+      --requests 16 --rate 20 --new-tokens 16
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from ..configs.base import INPUT_SHAPES, ShapeConfig
+from ..configs.base import INPUT_SHAPES
 from ..configs.registry import get_config
 from ..models import model as model_lib
+from ..serving import ServingEngine, WorkloadConfig, make_trace
 from . import steps as steps_lib
-from .mesh import make_local_mesh, make_production_mesh
+from .mesh import make_production_mesh
+
+
+def parse_mix(spec: str, top_k: int):
+    """``"8:0.5,1:0.5"`` -> tier mix tuple; ``""`` -> uniform top_k."""
+    if not spec:
+        return ((top_k, 1.0),)
+    out = []
+    for part in spec.split(","):
+        k, frac = part.split(":")
+        out.append((int(k), float(frac)))
+    return tuple(out)
+
+
+def slot_k_for_mix(mix, num_slots: int):
+    """Partition the slot pool proportionally to the tier mix.
+
+    Every tier keeps >= 1 slot — a tier with zero slots but nonzero
+    traffic would strand its requests in the queue (the engine raises once
+    nothing else is runnable)."""
+    if num_slots < len(mix):
+        raise SystemExit(f"--slots {num_slots} < {len(mix)} tiers in --mix;"
+                         " every tier needs at least one slot")
+    total = sum(f for _, f in mix)
+    counts = [max(1, round(num_slots * f / total)) for _, f in mix]
+    while sum(counts) > num_slots:
+        counts[counts.index(max(counts))] -= 1   # > 1: len(mix) <= num_slots
+    while sum(counts) < num_slots:
+        counts[counts.index(min(counts))] += 1
+    slot_k = []
+    for (k, _), n in zip(mix, counts):
+        slot_k.extend([k] * n)
+    return tuple(slot_k)
 
 
 def main() -> None:
@@ -29,9 +62,18 @@ def main() -> None:
     ap.add_argument("--arch", default="olmoe-1.3b-6.9b")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--k", type=int, default=None,
-                    help="activated experts at serving time (FLAME)")
+                    help="uniform serving budget (all slots / production "
+                         "step); shorthand for --mix K:1.0 with --local")
     ap.add_argument("--local", action="store_true")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--slot-len", type=int, default=48)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=float("inf"),
+                    help="Poisson arrival rate (req/s); inf = closed batch")
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--mix", default="",
+                    help="tier mix k:frac[,k:frac...] (FLAME adaptive-k); "
+                         "empty = full top_k everywhere")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
@@ -52,36 +94,38 @@ def main() -> None:
                   f"temp/device — ready for real hardware")
         return
 
-    # ---- local demo: prefill + decode a batch of requests ----
+    # ---- local: the continuous-batching engine over a synthetic trace ----
     cfg = get_config(args.arch, "smoke")
-    k = args.k if args.k is not None else (cfg.moe.top_k or None)
-    key = jax.random.PRNGKey(0)
-    params = model_lib.init_params(key, cfg)
-    B, prompt_len = 4, 16
-    total = prompt_len + args.new_tokens
-    shape_tok = ((B, prompt_len, cfg.num_codebooks) if cfg.num_codebooks
-                 else (B, prompt_len))
-    prompts = jax.random.randint(key, shape_tok, 0, cfg.vocab_size)
+    if cfg.num_codebooks > 0:
+        raise SystemExit(f"{cfg.name}: the serving engine is text-only; "
+                         "codebook (audio) archs have no engine path yet")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    top_k = cfg.moe.top_k if cfg.moe.enabled else 0
+    if args.k is not None and top_k:
+        if args.mix:
+            raise SystemExit("--k and --mix are mutually exclusive; "
+                             "--k N is shorthand for --mix N:1.0")
+        args.mix = f"{args.k}:1.0"       # uniform reduced-k pool
+    mix = parse_mix(args.mix, top_k) if top_k else ()
+    slot_k = slot_k_for_mix(mix, args.slots) if mix else None
 
-    t0 = time.time()
-    logits, cache = model_lib.prefill(cfg, params, prompts, k=k,
-                                      cache_len=total)
-    decode = jax.jit(
-        lambda p, c, t, pos: model_lib.decode_step(cfg, p, c, t, pos, k=k))
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if cfg.num_codebooks:
-        tok = tok.reshape(B, 1, cfg.num_codebooks)
-    out = [tok]
-    for i in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, tok, prompt_len + i)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if cfg.num_codebooks:
-            tok = tok.reshape(B, 1, cfg.num_codebooks)
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    print(f"{cfg.name} (k={k}): decoded {gen.shape} in "
-          f"{time.time() - t0:.2f}s")
-    print("sample token ids:", np.asarray(gen)[0].ravel()[:16].tolist())
+    # prompts must leave room for at least one generated token in a slot
+    prompt_lens = tuple(L for L in (8, 16) if L + 1 <= args.slot_len)
+    if not prompt_lens:
+        raise SystemExit(f"--slot-len {args.slot_len} too small for the "
+                         "workload's 8-token prompts (need >= 9)")
+    wl = WorkloadConfig(
+        n_requests=args.requests, rate=args.rate,
+        prompt_lens=prompt_lens, new_tokens=(args.new_tokens,),
+        tier_mix=mix, vocab_size=cfg.vocab_size)
+    engine = ServingEngine(cfg, params, num_slots=args.slots,
+                           slot_len=args.slot_len, slot_k=slot_k)
+    print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens, "
+          f"slot_k={engine.slot_k}")
+    report = engine.run(make_trace(wl))
+    for key, val in report.summary().items():
+        print(f"  {key}: {val:.2f}" if isinstance(val, float)
+              else f"  {key}: {val}")
 
 
 if __name__ == "__main__":

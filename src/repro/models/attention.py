@@ -173,7 +173,9 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      logit_softcap: float = 0.0) -> jnp.ndarray:
     """One-token attention.  q: (B,1,H,D); caches: (B,Sc,KV,D).
 
-    ``pos`` is the absolute position of the current token.  For a ring
+    ``pos`` is the absolute position of the current token: a scalar, or a
+    ``(B,)`` vector of per-row positions (the serving engine's slotted
+    decode, where every slot is at a different depth).  For a ring
     (sliding-window) cache every slot is valid once the ring has wrapped;
     for a linear cache only slots ``<= pos`` are valid.
     """
@@ -187,13 +189,14 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                    k_cache.astype(jnp.float32)) * scale
     s = softcap(s, logit_softcap)
     idx = jnp.arange(Sc)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
     if window > 0:
         # ring cache of size Sc == window: slot valid iff it has been written
-        n_valid = jnp.minimum(pos + 1, Sc)
-        valid = idx < n_valid
+        n_valid = jnp.minimum(posb + 1, Sc)
+        valid = idx[None, :] < n_valid[:, None]
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = idx[None, :] <= posb[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, D).astype(q.dtype)
@@ -233,11 +236,22 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
 
     new_cache = None
     if cache is not None and cache_pos is not None and S == 1:
-        # decode: write this token's K/V into the ring/linear cache
+        # decode: write this token's K/V into the ring/linear cache.
+        # ``cache_pos`` may be a scalar (uniform batch) or a (B,) vector of
+        # per-row positions (slotted serving decode) — the vector case
+        # scatters each row's K/V at its own depth.
         Sc = cache["k"].shape[1]
-        slot = cache_pos % Sc if cfg.attention_window > 0 else cache_pos
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        cp = jnp.asarray(cache_pos)
+        slot = cp % Sc if cfg.attention_window > 0 else cp
+        if cp.ndim == 1:
+            bidx = jnp.arange(B)
+            k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+            v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                          slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                          slot, 1)
         out = decode_attention(q, k_cache, v_cache, cache_pos,
                                window=cfg.attention_window,
                                logit_softcap=cfg.attn_logit_softcap)

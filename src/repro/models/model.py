@@ -126,7 +126,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
                  positions, *, lora, rescaler, lora_scale, k,
                  cache=None, cache_pos=None, return_cache=False,
                  deterministic=True, num_groups=1, inner_act_fn=None,
-                 outer_act_fn=None, moe_shard_fns=None):
+                 outer_act_fn=None, moe_shard_fns=None, slot_mask=None):
     def _reshard(t):
         # force the residual add's output back to the between-block
         # sharding so GSPMD lowers the partial-sum as a reduce-scatter
@@ -167,7 +167,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
             p["moe"], cfg, h2, k=k, rescaler=rescaler,
             lora=lg.get("moe"), lora_scale=lora_scale,
             deterministic=deterministic, num_groups=num_groups,
-            shard_fns=moe_shard_fns)
+            shard_fns=moe_shard_fns, slot_mask=slot_mask)
         x = _reshard(x + h2)
     elif cfg.d_ff > 0:
         h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
@@ -187,7 +187,7 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 cache=None, cache_pos=None, return_cache=False,
                 remat=False, remat_chunk=0, deterministic=True,
                 num_groups=1, act_fn=None, inner_act_fn=None,
-                moe_shard_fns=None):
+                moe_shard_fns=None, slot_mask=None):
     P = cfg.pattern_period
     trainable = trainable or {}
     lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
@@ -231,7 +231,7 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 deterministic=deterministic, num_groups=num_groups,
                 inner_act_fn=inner_act_fn,
                 outer_act_fn=act_fn if inner_act_fn is not None else None,
-                moe_shard_fns=moe_shard_fns)
+                moe_shard_fns=moe_shard_fns, slot_mask=slot_mask)
             if aux is not None:
                 counts[key] = aux.activation_counts
             if nc is not None:
@@ -416,34 +416,45 @@ def init_cache(cfg, batch: int, seq_len: int) -> PyTree:
 
 
 def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
-                num_groups=1):
-    """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int.
+                num_groups=1, slot_mask=None):
+    """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int, or a
+    (B,) vector of per-row positions — the serving engine's slotted decode,
+    where every cache slot sits at a different depth (serving/engine.py).
+    ``k`` follows :func:`repro.models.moe_layer.apply_moe`: an int, or a
+    length-B tuple of per-slot expert budgets (FLAME's adaptive-k serving);
+    ``slot_mask``: optional dynamic (B,) 0/1 vector masking rows (free
+    serving slots) out of MoE routing entirely.
     Returns (logits (B,1,V[,K]), new_cache)."""
     x = embed_tokens(params, cfg, tokens)
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos)
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos)
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable, k=k,
                         cache=cache, cache_pos=pos, return_cache=True,
-                        num_groups=num_groups)
+                        num_groups=num_groups, slot_mask=slot_mask)
     h = rms_norm(params["final_norm"], h, cfg.rms_eps)
     return lm_head(params, cfg, h), ys["cache"]
 
 
 def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
-            act_fn=None, cache_len=None):
+            act_fn=None, cache_len=None, slot_mask=None):
     """Forward pass that also builds the decode cache.
     Returns (logits_last (B,1,V[,K]), cache).
 
     ``cache_len``: total decode capacity; attention K/V caches are
     zero-padded from the prompt length up to ``cache_len_for(cfg,
     cache_len)`` so decode_step can write new tokens in place (the padded
-    slots are masked out by ``idx <= pos`` until written)."""
+    slots are masked out by ``idx <= pos`` until written).
+
+    ``slot_mask``: optional dynamic (B,) 0/1 row mask — rows at 0 are
+    excluded from MoE routing (the serving engine's prefill batch-bucket
+    padding rows, which must not consume expert capacity)."""
     B, S = tokens.shape[:2]
     positions = jnp.arange(S)
     x = embed_tokens(params, cfg, tokens)
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable,
                         k=k, return_cache=True, num_groups=num_groups,
-                        act_fn=act_fn)
+                        act_fn=act_fn, slot_mask=slot_mask)
     cache = ys["cache"]
     target = cache_len_for(cfg, cache_len or S)
 

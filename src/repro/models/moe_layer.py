@@ -63,10 +63,17 @@ def init_moe(key, cfg) -> dict:
     return p
 
 
-def _capacity(tokens: int, num_experts: int, k: int, factor: float) -> int:
-    c = int(tokens * k * factor / num_experts) + 1
-    # round up to a multiple of 8 for lane-friendly layouts
+def _capacity_from_assignments(n_assign: float, num_experts: int,
+                               factor: float) -> int:
+    """Expert-queue capacity for ``n_assign`` total (token, expert)
+    assignments: ceil-ish with slack ``factor``, rounded up to a multiple
+    of 8 for lane-friendly layouts."""
+    c = int(n_assign * factor / num_experts) + 1
     return max(8, ((c + 7) // 8) * 8)
+
+
+def _capacity(tokens: int, num_experts: int, k: int, factor: float) -> int:
+    return _capacity_from_assignments(tokens * k, num_experts, factor)
 
 
 def topk_routing(router_logits: jnp.ndarray, k: int):
@@ -85,17 +92,29 @@ def topk_routing(router_logits: jnp.ndarray, k: int):
     return weights, mask
 
 
-def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
+def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
               rescaler: Optional[jnp.ndarray] = None,
               lora: Optional[dict] = None, lora_scale: float = 0.0,
               deterministic: bool = True,
               rng: Optional[jax.Array] = None,
               num_groups: int = 1,
-              shard_fns: Optional[dict] = None):
+              shard_fns: Optional[dict] = None,
+              slot_mask: Optional[jnp.ndarray] = None):
     """x: (B, S, D) -> (out (B,S,D), MoEAux).
 
-    ``k`` is static (client budget k_i).  ``rescaler`` is the FLAME
-    learnable scalar s_i (None => 1.0).
+    ``k`` is static (client budget k_i): an ``int`` applied to every token,
+    or a length-``B`` tuple of per-row budgets (the serving engine's
+    per-slot adaptive k — each row of the batch decodes at its own budget,
+    see serving/engine.py).  A uniform tuple collapses to the int path, so
+    the two spellings are bit-identical.  ``rescaler`` is the FLAME
+    learnable scalar s_i (None => 1.0): a scalar, or a length-``B`` vector
+    applied per row (the engine's per-slot rescaler).
+
+    ``slot_mask``: optional dynamic (B,) 0/1 vector — rows at 0 route to
+    ZERO experts (their budget is masked, not just their output), so they
+    cannot occupy expert-queue capacity that real rows need.  The serving
+    engine masks its free slots this way; without it, garbage rows in a
+    slotted decode batch could evict real tokens under GShard capacity.
 
     ``num_groups``: GShard routing groups.  Capacity and the dispatch/
     combine one-hots are *per-group* ``(G, T_g, E, C_g)`` so when the token
@@ -113,15 +132,40 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
     Tg = T // G
     xg = x.reshape(G, Tg, D)
 
+    if isinstance(k, (tuple, list)):
+        assert len(k) == B, (len(k), B)
+        if len(set(k)) == 1 and slot_mask is None:
+            k = int(k[0])                 # uniform budgets: static-int path
+    adaptive = isinstance(k, (tuple, list)) or slot_mask is not None
+    if adaptive:
+        # per-row budgets need global routing: grouped dispatch would need
+        # per-group capacities (the serving decode path runs G == 1)
+        assert G == 1, "per-slot k requires num_groups == 1"
+        k_slots = (tuple(int(v) for v in k)
+                   if isinstance(k, (tuple, list)) else (int(k),) * B)
+        max_k = max(k_slots)
+
     logits = jnp.einsum("gtd,de->gte", xg, p["router"])           # (G, Tg, E)
     if not deterministic and m.router_jitter > 0 and rng is not None:
         logits = logits + m.router_jitter * jax.random.normal(
             rng, logits.shape, logits.dtype)
-    # backend-dispatched fused router (softmax + top-k + the FLAME Eq. 6
-    # activation counts); reference path = ref.topk_router_ref, whose
-    # routing semantics are identical to topk_routing below
-    weights, mask, counts = kernel_backend.router(
-        cfg.kernels, logits.reshape(T, E), k)                     # (T, E) fp32
+    if adaptive:
+        # per-token budgets have no fused kernel — route through the
+        # reference adaptive router (the expert matmuls below still
+        # dispatch per backend); row b's S tokens all use budget k[b],
+        # zeroed where slot_mask marks the row inactive
+        from ..kernels.ref import adaptive_topk_router_ref
+        k_tok = jnp.repeat(jnp.asarray(k_slots, jnp.int32), S)
+        if slot_mask is not None:
+            k_tok = k_tok * jnp.repeat(slot_mask.astype(jnp.int32), S)
+        weights, mask, counts = adaptive_topk_router_ref(
+            logits.reshape(T, E), k_tok, max_k)                   # (T, E) fp32
+    else:
+        # backend-dispatched fused router (softmax + top-k + the FLAME Eq. 6
+        # activation counts); reference path = ref.topk_router_ref, whose
+        # routing semantics are identical to topk_routing below
+        weights, mask, counts = kernel_backend.router(
+            cfg.kernels, logits.reshape(T, E), k)                 # (T, E) fp32
     weights = weights.reshape(G, Tg, E)
     mask = mask.reshape(G, Tg, E)
     # Switch-style load-balance aux loss (kept for completeness; the paper
@@ -130,7 +174,14 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
     lb = E * jnp.mean(probs.mean((0, 1)) * mask.mean((0, 1))) * E
 
     # ----- capacity-based dispatch (per group) -----
-    C = _capacity(Tg, E, k, m.capacity_factor)
+    # Compute scales with the TOTAL expert assignments: on the adaptive
+    # path a mixed batch's capacity follows sum(k_i), so constrained slots
+    # genuinely shrink the expert workload (FLAME's FLOPs-adaptivity,
+    # per slot instead of per client).
+    if adaptive:
+        C = _capacity_from_assignments(S * sum(k_slots), E, m.capacity_factor)
+    else:
+        C = _capacity(Tg, E, k, m.capacity_factor)
     # position of each token within its expert's per-group queue
     pos_in_expert = (jnp.cumsum(mask, axis=1) - 1.0) * mask       # (G, Tg, E)
     keep = (pos_in_expert < C) & (mask > 0)
@@ -174,7 +225,11 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k: int,
         out = sf["out"](out)
 
     if rescaler is not None:
-        out = out * rescaler.astype(out.dtype)
+        r = rescaler.astype(out.dtype)
+        if r.ndim == 1 and r.shape[0] == B:
+            # per-slot rescaler s_i (serving): row b's tokens scale by r[b]
+            r = jnp.repeat(r, S).reshape(G, Tg, 1)
+        out = out * r
 
     # ----- shared experts (always active; Qwen2-MoE style) -----
     if "shared" in p:

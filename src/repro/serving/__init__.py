@@ -1,0 +1,21 @@
+"""Adaptive-k serving: continuous batching over a slotted KV cache.
+
+The subsystem has four layers (docs/architecture.md §Serving):
+
+* :mod:`repro.serving.kv_cache`  — ``SlotPool``: a fixed-capacity slotted
+  (paged-lite) KV-cache pool with allocate/release and per-slot
+  ``cache_pos``, so requests of different lengths share one compiled
+  decode step;
+* :mod:`repro.serving.scheduler` — ``Request``/``Scheduler``: FIFO queue
+  with tier-aware admission into free slots;
+* :mod:`repro.serving.engine`    — ``ServingEngine``: the continuous-
+  batching loop; one jitted decode step over the whole slot batch with
+  **per-slot expert budget k** (FLAME's adaptive-k at serving time) and
+  the rescaler applied per slot;
+* :mod:`repro.serving.workload`  — synthetic open-loop arrival traces
+  (Poisson arrivals, length/tier mixes) and latency percentile helpers.
+"""
+from .engine import ServingEngine, ServingReport  # noqa: F401
+from .kv_cache import SlotPool  # noqa: F401
+from .scheduler import Completion, Request, Scheduler  # noqa: F401
+from .workload import WorkloadConfig, make_trace, percentile  # noqa: F401

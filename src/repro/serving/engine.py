@@ -1,0 +1,348 @@
+"""Continuous-batching serving engine with per-slot adaptive k.
+
+The engine drives ONE jitted decode step over the whole slot pool every
+iteration.  Requests at different depths coexist because the per-slot
+``cache_pos`` vector is threaded into attention (scatter write + per-row
+validity mask); requests of different tiers coexist because the MoE layer
+takes a static per-slot expert-budget tuple (``slot_k``): premium slots
+decode at full k, constrained slots at k=1–2, and the dispatch capacity —
+hence the expert FLOPs — follows ``sum(slot_k)`` instead of
+``num_slots * k_max`` (models/moe_layer.py).  The FLAME rescaler is
+applied per slot the same way: each tier's trained ``s_i`` is stacked into
+a ``(n_periods, num_slots)`` leaf that the scan slices per layer.
+
+Engine loop (one ``step()``):
+
+  1. requests whose arrival time has passed join the scheduler queue;
+  2. the scheduler packs waiting requests into free slots (FIFO per
+     tier); admitted requests are prefilled — batched by prompt length,
+     padded to power-of-two batch buckets to bound recompiles — and their
+     caches installed into the pool (``SlotPool.write``), emitting the
+     first generated token (TTFT);
+  3. one decode step advances every active slot by a token; finished
+     sequences (budget reached / slot full) are evicted and their slots
+     released.
+
+Sampling is greedy (argmax); a request may instead carry ``forced``
+continuation tokens, which the engine feeds back while accumulating their
+NLL — teacher-forced quality evaluation through the serving path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+from .kv_cache import SlotPool
+from .scheduler import Completion, Request, Scheduler
+from .workload import percentile
+
+PyTree = Any
+
+
+def _log_softmax_np(x: np.ndarray) -> np.ndarray:
+    m = x.max(axis=-1, keepdims=True)
+    lse = np.log(np.exp(x - m).sum(axis=-1, keepdims=True)) + m
+    return x - lse
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (prefill batch buckets)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class _ActiveSlot:
+    req: Request
+    tokens: List[int]
+    nll: float
+    admitted: float
+    first_token: float
+    max_new: int
+
+
+@dataclass
+class ServingReport:
+    """Everything a serving run produced, plus latency/throughput views."""
+    completions: List[Completion]
+    decode_step_s: List[float] = field(default_factory=list)
+    prefill_s: List[float] = field(default_factory=list)
+    wall_s: float = 0.0
+    num_slots: int = 0
+    slot_k: Tuple[Optional[int], ...] = ()
+
+    def tokens_by_rid(self) -> Dict[int, np.ndarray]:
+        return {c.rid: c.tokens for c in self.completions}
+
+    def summary(self) -> Dict[str, float]:
+        n = len(self.completions)
+        gen = sum(c.n_generated for c in self.completions)
+        ttfts = [c.ttft for c in self.completions]
+        lats = [c.latency for c in self.completions]
+        return {
+            "n_requests": n,
+            "gen_tokens": gen,
+            "wall_s": self.wall_s,
+            "requests_per_s": n / max(self.wall_s, 1e-9),
+            "gen_tokens_per_s": gen / max(self.wall_s, 1e-9),
+            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
+            "ttft_p95_ms": percentile(ttfts, 95) * 1e3,
+            "latency_p50_ms": percentile(lats, 50) * 1e3,
+            "latency_p95_ms": percentile(lats, 95) * 1e3,
+            "decode_step_ms_mean": (float(np.mean(self.decode_step_s)) * 1e3
+                                    if self.decode_step_s else float("nan")),
+            "decode_steps": len(self.decode_step_s),
+            "truncated": sum(c.truncated for c in self.completions),
+        }
+
+
+class ServingEngine:
+    """Continuous batching over a :class:`SlotPool` with per-slot k.
+
+    ``slot_k``: per-slot expert budgets (tuple of ints, len ``num_slots``);
+    defaults to ``cfg.moe.top_k`` everywhere; ignored (None) for non-MoE
+    models.  The tuple is STATIC — it fixes the compiled step's dispatch
+    capacity — so tiers are a property of the pool, and the scheduler
+    matches requests to slots of their tier.
+
+    ``lora``: optional unmerged adapter tree (serving without merging);
+    ``rescaler_by_k``: optional ``{k: rescaler tree}`` — each tier's
+    trained FLAME ``s_i``, applied per slot during decode and per batch
+    during prefill.
+    """
+
+    def __init__(self, cfg, params: PyTree, *, lora: Optional[PyTree] = None,
+                 rescaler_by_k: Optional[Dict[int, PyTree]] = None,
+                 num_slots: int = 8, slot_len: int = 64,
+                 slot_k: Optional[Sequence[int]] = None):
+        assert cfg.num_codebooks == 0, "serving engine: text models only"
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.slot_len = slot_len
+        if cfg.moe.enabled:
+            resolved = tuple(int(v) for v in (
+                slot_k if slot_k is not None
+                else (cfg.moe.top_k,) * num_slots))
+            assert len(resolved) == num_slots, (resolved, num_slots)
+            assert all(1 <= v <= cfg.moe.num_experts for v in resolved)
+            self.slot_k: Tuple[Optional[int], ...] = resolved
+            self._moe_k: Optional[Tuple[int, ...]] = resolved
+        else:
+            assert slot_k is None, "slot_k is meaningless without MoE"
+            self.slot_k = (None,) * num_slots
+            self._moe_k = None
+
+        self._lora = lora
+        self._rescaler_by_k = rescaler_by_k
+        self._decode_trainable = self._build_decode_trainable()
+
+        self.pool = SlotPool(cfg, num_slots, slot_len)
+        self.scheduler = Scheduler()
+        self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
+        self._last_tok = np.zeros((num_slots, 1), np.int32)
+
+        moe_k = self._moe_k
+
+        # the pool cache is donated: the engine replaces its reference with
+        # the returned cache every step, and donation lets XLA update the
+        # slot arrays in place instead of copying the whole pool per token.
+        # ``active``/``real`` masks free slots / prefill-bucket padding rows
+        # out of MoE routing (budget 0), so garbage rows can never consume
+        # expert capacity a real request needs.
+        @partial(jax.jit, donate_argnums=(2,))
+        def _decode_fn(params, trainable, cache, tokens, pos, active):
+            logits, new_cache = model_lib.decode_step(
+                cfg, params, cache, tokens, pos, trainable=trainable,
+                k=moe_k, slot_mask=active if cfg.moe.enabled else None)
+            return logits[:, 0].astype(jnp.float32), new_cache
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _prefill_fn(params, trainable, prompts, real, k):
+            logits, cache = model_lib.prefill(
+                cfg, params, prompts, trainable=trainable, k=k,
+                cache_len=slot_len,
+                slot_mask=real if cfg.moe.enabled else None)
+            return logits[:, 0].astype(jnp.float32), cache
+
+        self._decode_fn = _decode_fn
+        self._prefill_fn = _prefill_fn
+
+    # ------------------------------------------------------------- trainables
+    def _build_decode_trainable(self) -> Optional[PyTree]:
+        tr: dict = {}
+        if self._lora is not None:
+            tr["lora"] = self._lora
+        if self._rescaler_by_k:
+            ks = [k for k in self.slot_k if k is not None]
+            missing = sorted(set(ks) - set(self._rescaler_by_k))
+            assert not missing, f"rescaler_by_k missing tiers {missing}"
+            # stack tiers per slot: leaf (n_periods,) -> (n_periods, S);
+            # the stack scan slices the leading axis, so each MoE layer
+            # sees a (num_slots,) vector — the per-slot rescaler path in
+            # moe_layer.apply_moe
+            tr["rescaler"] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves, axis=-1),
+                *[self._rescaler_by_k[k] for k in ks])
+        return tr or None
+
+    def _prefill_trainable(self, k: Optional[int]) -> Optional[PyTree]:
+        tr: dict = {}
+        if self._lora is not None:
+            tr["lora"] = self._lora
+        if self._rescaler_by_k and k is not None:
+            tr["rescaler"] = self._rescaler_by_k[k]
+        return tr or None
+
+    # ------------------------------------------------------------------ admit
+    def _admit(self, report: ServingReport) -> int:
+        free = self.pool.free_slots
+        if not free or not len(self.scheduler):
+            return 0
+        assignments = self.scheduler.admit(free, self.slot_k)
+        groups: Dict[Tuple[int, Optional[int]],
+                     List[Tuple[Request, int]]] = {}
+        for req, slot in assignments:
+            self.pool.take(slot)
+            assert req.prompt_len + 1 <= self.slot_len, \
+                f"request {req.rid}: prompt {req.prompt_len} leaves no room" \
+                f" in a {self.slot_len}-token slot"
+            groups.setdefault((req.prompt_len, self.slot_k[slot]),
+                              []).append((req, slot))
+
+        for (L, kk), items in groups.items():
+            nb = len(items)
+            bucket = _bucket(nb)
+            prompts = np.stack([r.prompt for r, _ in items]
+                               + [items[0][0].prompt] * (bucket - nb))
+            admitted = self._now()
+            real = jnp.asarray(np.arange(bucket) < nb, jnp.float32)
+            logits, cache = self._prefill_fn(
+                self.params, self._prefill_trainable(kk),
+                jnp.asarray(prompts), real, k=kk)
+            logits_np = np.asarray(logits)          # blocks until ready
+            self.pool.write([s for _, s in items], cache, [L] * nb)
+            tft = self._now()
+            report.prefill_s.append(tft - admitted)
+
+            for j, (req, slot) in enumerate(items):
+                max_new = req.max_new_tokens
+                if req.forced is not None:
+                    max_new = min(max_new, len(req.forced))
+                tok, nll = self._pick(logits_np[j], req, 0)
+                self._active[slot] = _ActiveSlot(
+                    req=req, tokens=[tok], nll=nll, admitted=admitted,
+                    first_token=tft, max_new=max_new)
+                self._last_tok[slot, 0] = tok
+                if len(self._active[slot].tokens) >= max_new \
+                        or self.pool.slot_full(slot):
+                    self._finish(slot, report)
+        return len(assignments)
+
+    def _pick(self, logits_row: np.ndarray, req: Request,
+              idx: int) -> Tuple[int, float]:
+        """Next token for one slot: greedy argmax, or the request's forced
+        token (accumulating its NLL)."""
+        if req.forced is not None:
+            tok = int(req.forced[idx])
+            return tok, float(-_log_softmax_np(logits_row)[tok])
+        return int(np.argmax(logits_row)), 0.0
+
+    # ----------------------------------------------------------------- decode
+    def _decode_once(self, report: ServingReport) -> None:
+        t_start = time.perf_counter()
+        active_mask = jnp.asarray(
+            [a is not None for a in self._active], jnp.float32)
+        logits, new_cache = self._decode_fn(
+            self.params, self._decode_trainable, self.pool.cache,
+            jnp.asarray(self._last_tok), self.pool.positions(), active_mask)
+        logits_np = np.asarray(logits)              # blocks until ready
+        self.pool.cache = new_cache
+        report.decode_step_s.append(time.perf_counter() - t_start)
+
+        active = [s for s, a in enumerate(self._active) if a is not None]
+        self.pool.advance(active)
+        for slot in active:
+            a = self._active[slot]
+            tok, nll = self._pick(logits_np[slot], a.req, len(a.tokens))
+            a.tokens.append(tok)
+            a.nll += nll
+            self._last_tok[slot, 0] = tok
+            if len(a.tokens) >= a.max_new or self.pool.slot_full(slot):
+                self._finish(slot, report)
+
+    def _finish(self, slot: int, report: ServingReport) -> None:
+        a = self._active[slot]
+        report.completions.append(Completion(
+            rid=a.req.rid, prompt_len=a.req.prompt_len,
+            tokens=np.asarray(a.tokens, np.int32),
+            k=self.slot_k[slot] or 0, arrival=a.req.arrival,
+            admitted=a.admitted, first_token=a.first_token,
+            finished=self._now(), nll_sum=a.nll,
+            truncated=len(a.tokens) < a.max_new))
+        self._active[slot] = None
+        self.pool.release(slot)
+
+    # ------------------------------------------------------------------- loop
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self._active)
+
+    def run(self, requests: Sequence[Request],
+            max_steps: Optional[int] = None) -> ServingReport:
+        """Serve an open-loop trace to completion.
+
+        Arrival times are interpreted on the engine's wall clock starting
+        at call time; ``arrival=0.0`` everywhere makes the run a
+        deterministic closed batch.
+        """
+        assert self.n_active == 0 and not len(self.scheduler), \
+            "engine already mid-run"
+        # fail fast: reject unservable requests BEFORE any work starts, so
+        # a malformed trace can't abort a run mid-flight and discard the
+        # in-flight requests' results
+        too_long = [r.rid for r in requests
+                    if r.prompt_len + 1 > self.slot_len]
+        if too_long:
+            raise ValueError(
+                f"requests {too_long}: prompt leaves no room for a "
+                f"generated token in a {self.slot_len}-token slot")
+        pending = sorted(requests, key=lambda r: r.arrival)
+        report = ServingReport(completions=[], num_slots=self.num_slots,
+                               slot_k=self.slot_k)
+        self._t0 = time.perf_counter()
+        steps = 0
+        while pending or len(self.scheduler) or self.n_active:
+            now = self._now()
+            while pending and pending[0].arrival <= now:
+                self.scheduler.add(pending.pop(0))
+            admitted = self._admit(report)
+            if self.n_active:
+                self._decode_once(report)
+                steps += 1
+                if max_steps is not None and steps >= max_steps:
+                    break
+            elif not admitted:
+                if pending:                  # idle until the next arrival
+                    time.sleep(max(0.0, min(pending[0].arrival - self._now(),
+                                            0.01)))
+                elif len(self.scheduler):
+                    stuck = [r.rid for r in self.scheduler.queue]
+                    raise RuntimeError(
+                        f"requests {stuck} match no slot tier "
+                        f"(slot_k={self.slot_k})")
+        report.wall_s = self._now()
+        report.completions.sort(key=lambda c: c.rid)
+        return report

@@ -1,0 +1,103 @@
+"""Slotted (paged-lite) KV-cache pool.
+
+One device-resident decode cache of ``num_slots`` fixed-capacity slots
+(``model.init_cache`` with ``batch=num_slots``) plus host-side slot
+bookkeeping: a free list and a per-slot ``cache_pos``.  Requests of
+different lengths occupy different slots of the SAME arrays, so the engine
+drives them all through one compiled ``decode_step`` — the per-slot
+positions become a ``(num_slots,)`` vector threaded into attention
+(scatter write + per-row validity mask, see models/attention.py).
+
+This is the "paged-lite" point on the vLLM axis: whole-slot granularity
+instead of fixed-size pages — no block tables, but the same decoupling of
+request lifetime from batch shape that continuous batching needs.
+
+All cache leaves carry the layout ``(n_periods, batch, ...)`` — batch is
+axis 1 for both attention K/V and Mamba state — which is what
+:meth:`SlotPool.write` relies on.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+
+PyTree = Any
+
+
+class SlotPool:
+    """Fixed-capacity slotted KV-cache pool with allocate/release."""
+
+    def __init__(self, cfg, num_slots: int, slot_len: int):
+        assert num_slots >= 1 and slot_len >= 1, (num_slots, slot_len)
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.slot_len = slot_len
+        # attention slots hold min(window, slot_len) positions (ring cache)
+        self.attn_len = model_lib.cache_len_for(cfg, slot_len)
+        self.cache: PyTree = model_lib.init_cache(cfg, num_slots, slot_len)
+        self.cache_pos = np.zeros((num_slots,), np.int32)
+        self._free: List[int] = list(range(num_slots))
+
+    # ------------------------------------------------------------ bookkeeping
+    @property
+    def free_slots(self) -> List[int]:
+        """Free slot ids, lowest first (deterministic allocation order)."""
+        return sorted(self._free)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def allocate(self) -> int:
+        if not self._free:
+            raise RuntimeError("SlotPool exhausted")
+        self._free.sort()
+        return self._free.pop(0)
+
+    def take(self, slot: int) -> None:
+        """Claim a specific free slot (scheduler-chosen assignment)."""
+        self._free.remove(slot)
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.num_slots and slot not in self._free, slot
+        self.cache_pos[slot] = 0
+        self._free.append(slot)
+
+    # ------------------------------------------------------------- cache I/O
+    def write(self, slots: Sequence[int], piece: PyTree,
+              lengths: Sequence[int]) -> None:
+        """Install a freshly prefilled cache into ``slots``.
+
+        ``piece``: a cache tree with batch size ``>= len(slots)`` on axis 1
+        (extra rows — prefill bucket padding — are ignored);
+        ``lengths``: per-slot prompt length, i.e. the position the first
+        decode step will write.
+        """
+        idx = np.asarray(list(slots), np.int32)
+        nb = len(idx)
+
+        def put(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
+            return pool.at[:, idx].set(pc[:, :nb].astype(pool.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, piece)
+        self.cache_pos[idx] = np.asarray(list(lengths), np.int32)
+
+    def positions(self) -> jnp.ndarray:
+        """Per-slot decode positions as a device vector."""
+        return jnp.asarray(self.cache_pos)
+
+    def advance(self, slots: Sequence[int]) -> None:
+        """One token decoded in each of ``slots``."""
+        self.cache_pos[np.asarray(list(slots), np.int32)] += 1
+
+    def slot_full(self, slot: int) -> bool:
+        """No room left to write the next decode token (linear cache);
+        ring (sliding-window) caches never fill."""
+        if self.cfg.attention_window > 0:
+            return False
+        return int(self.cache_pos[slot]) >= self.attn_len

@@ -1,0 +1,104 @@
+"""Request queue and admission policy for the serving engine.
+
+Requests arrive (open-loop) and wait in a FIFO queue; each engine step the
+scheduler packs waiting requests into free KV-cache slots.  Slots are
+tier-typed — the engine compiles ONE decode step with a static per-slot
+expert-budget vector (premium slots at full k, constrained slots at
+k=1–2), so admission is FIFO *per tier*: a request is placed into the
+first free slot whose budget matches, and otherwise keeps waiting without
+blocking requests of other tiers behind it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One serving request.
+
+    ``k``: requested expert budget (None = take any slot / server default).
+    ``forced``: optional teacher-forced continuation — when set, the engine
+    feeds these tokens back instead of its argmax samples and accumulates
+    their negative log-likelihood (quality evaluation through the engine,
+    used by examples/adaptive_serving.py).
+    """
+    rid: int
+    prompt: np.ndarray                 # (L,) int32 token ids
+    max_new_tokens: int
+    k: Optional[int] = None
+    arrival: float = 0.0               # seconds on the engine clock
+    forced: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass
+class Completion:
+    """Per-request record emitted when a request leaves its slot."""
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray                 # generated token ids
+    k: int                             # budget the request decoded at
+    arrival: float
+    admitted: float                    # prefill start (queueing delay ends)
+    first_token: float                 # TTFT reference point
+    finished: float
+    nll_sum: float = 0.0               # teacher-forced NLL (forced mode)
+    truncated: bool = False            # slot capacity hit before max_new
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+    @property
+    def n_generated(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclass
+class Scheduler:
+    """FIFO queue + tier-aware slot admission."""
+
+    queue: List[Request] = field(default_factory=list)
+
+    def add(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def admit(self, free_slots: Sequence[int],
+              slot_k: Sequence[Optional[int]]
+              ) -> List[Tuple[Request, int]]:
+        """Pack queued requests into ``free_slots``.
+
+        ``slot_k[s]`` is slot ``s``'s static expert budget (None for
+        non-MoE models).  FIFO per tier: each queued request takes the
+        first free slot matching its requested ``k`` (any slot when the
+        request doesn't care); non-matching requests are skipped, not
+        blocked on.  Returns (request, slot) assignments and removes the
+        admitted requests from the queue.
+        """
+        free = list(free_slots)
+        assigned: List[Tuple[Request, int]] = []
+        remaining: List[Request] = []
+        for req in self.queue:
+            slot = next((s for s in free
+                         if req.k is None or slot_k[s] == req.k), None)
+            if slot is None:
+                remaining.append(req)
+                continue
+            free.remove(slot)
+            assigned.append((req, slot))
+        self.queue = remaining
+        return assigned

@@ -1,0 +1,63 @@
+"""Synthetic open-loop serving workloads.
+
+Generates deterministic request traces for the engine benchmarks: Poisson
+arrivals at a configurable rate, categorical prompt-length and
+output-length distributions, and a tier mix mapping expert budgets k to
+traffic fractions (FLAME's premium/constrained client tiers at serving
+time).  ``rate=inf`` collapses the trace to a closed batch (everything
+arrives at t=0) — the deterministic configuration the parity tests use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .scheduler import Request
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    n_requests: int = 32
+    rate: float = float("inf")            # Poisson arrival rate, requests/s
+    prompt_lens: Tuple[int, ...] = (16, 32)
+    prompt_len_probs: Optional[Tuple[float, ...]] = None   # None = uniform
+    new_tokens: Tuple[int, ...] = (8, 16)
+    new_tokens_probs: Optional[Tuple[float, ...]] = None
+    # (k, fraction) tier mix; empty = every request takes any slot
+    tier_mix: Tuple[Tuple[int, float], ...] = ()
+    vocab_size: int = 512
+    seed: int = 0
+
+
+def make_trace(wl: WorkloadConfig) -> List[Request]:
+    """Materialise a deterministic request trace from ``wl``."""
+    rng = np.random.default_rng(wl.seed)
+    ks: Sequence[Optional[int]]
+    if wl.tier_mix:
+        tiers = [k for k, _ in wl.tier_mix]
+        fracs = np.asarray([f for _, f in wl.tier_mix], np.float64)
+        fracs = fracs / fracs.sum()
+        ks = rng.choice(tiers, size=wl.n_requests, p=fracs).tolist()
+    else:
+        ks = [None] * wl.n_requests
+
+    t = 0.0
+    out: List[Request] = []
+    for i in range(wl.n_requests):
+        if np.isfinite(wl.rate) and wl.rate > 0 and i > 0:
+            t += float(rng.exponential(1.0 / wl.rate))
+        L = int(rng.choice(wl.prompt_lens, p=wl.prompt_len_probs))
+        n_new = int(rng.choice(wl.new_tokens, p=wl.new_tokens_probs))
+        prompt = rng.integers(0, wl.vocab_size, (L,)).astype(np.int32)
+        out.append(Request(rid=i, prompt=prompt, max_new_tokens=n_new,
+                           k=ks[i], arrival=t))
+    return out
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """float(np.percentile) with an empty-input guard."""
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), q))

@@ -89,6 +89,59 @@ def test_training_reduces_loss_over_rounds():
     assert res["val_loss"] < init_loss, (res, init_loss)
 
 
+def test_round_resume_matches_straight_run(tmp_path):
+    """run(checkpoint_to=...) + a fresh server's run(resume_from=...) must
+    reproduce a straight multi-round run exactly: global LoRA, client
+    rescalers, and (via the replayed sampling RNG) cohort selection."""
+    path = str(tmp_path / "fed.npz")
+
+    def fresh():
+        fed = FederatedConfig(num_clients=4, rounds=2, method="flame",
+                              participation=0.5, temperature=2)
+        return build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+
+    straight = fresh()
+    straight.server.run()
+
+    first = fresh()
+    first.server.fed = dataclasses.replace(first.server.fed, rounds=1)
+    first.server.run(checkpoint_to=path)
+
+    resumed = fresh()
+    resumed.server.run(resume_from=path)
+    assert len(resumed.server.history) == 1          # only round 1 re-ran
+    assert resumed.server.history[0].round_idx == 1
+    assert (resumed.server.history[0].participating
+            == straight.server.history[1].participating)
+    for a, b in zip(jax.tree.leaves(straight.server.global_lora),
+                    jax.tree.leaves(resumed.server.global_lora)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    for ca, cb in zip(straight.server.clients, resumed.server.clients):
+        if ca.rescaler is None:
+            assert cb.rescaler is None
+            continue
+        for a, b in zip(jax.tree.leaves(ca.rescaler),
+                        jax.tree.leaves(cb.rescaler)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_resume_round_idx_survives_rechckpoint(tmp_path):
+    """A checkpoint written AFTER a resume records the true round count."""
+    from repro.checkpoint import io as ckpt_io
+    path = str(tmp_path / "fed.npz")
+    fed = FederatedConfig(num_clients=2, rounds=2, method="flame")
+    exp = build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+    exp.server.fed = dataclasses.replace(fed, rounds=1)
+    exp.server.run(checkpoint_to=path)
+
+    exp2 = build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+    exp2.server.run(resume_from=path, checkpoint_to=path)
+    _, meta = ckpt_io.load(path)
+    assert meta["round_idx"] == 2
+
+
 def test_federated_state_checkpoint_roundtrip(tmp_path):
     exp, _ = _run("flame")
     path = str(tmp_path / "state.npz")

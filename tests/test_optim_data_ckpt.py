@@ -84,6 +84,32 @@ def test_dirichlet_alpha_controls_skew():
     assert skew(0.5) > 1.5 * skew(50.0)
 
 
+def test_min_shard_guarantee_under_starvation():
+    """Heavily skewed Dirichlet draws must still leave every client at or
+    above min_per_client (the donor loop's fallback splits the largest
+    shard instead of silently giving up)."""
+    data = DataConfig(vocab_size=64, n_examples=48, seq_len=8, n_clusters=2)
+    corpus = make_corpus(data)
+    for seed in range(8):
+        shards = dirichlet_partition(corpus, num_clients=12, alpha=0.05,
+                                     seed=seed, min_per_client=3)
+        sizes = [len(s.tokens) for s in shards]
+        assert min(sizes) >= 3, (seed, sizes)
+        assert sum(sizes) == len(corpus.tokens)
+
+
+def test_min_shard_guarantee_caps_at_feasible_floor():
+    """min_per_client above len(corpus)//num_clients can't be satisfied;
+    the guarantee caps at the feasible floor instead of asserting out."""
+    data = DataConfig(vocab_size=64, n_examples=10, seq_len=8, n_clusters=2)
+    corpus = make_corpus(data)
+    shards = dirichlet_partition(corpus, num_clients=8, alpha=0.1,
+                                 seed=0, min_per_client=4)
+    sizes = [len(s.tokens) for s in shards]
+    assert min(sizes) >= 10 // 8, sizes
+    assert sum(sizes) == len(corpus.tokens)
+
+
 def test_batches_cover_epoch():
     c = make_corpus(DataConfig(vocab_size=64, n_examples=40, seq_len=32))
     rng = np.random.default_rng(0)

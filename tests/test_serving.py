@@ -1,0 +1,273 @@
+"""Serving subsystem tests: slotted decode parity with the naive loop,
+per-slot adaptive k, pool/scheduler/workload mechanics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.configs.base import KernelConfig
+from repro.core import lora as lora_lib
+from repro.kernels.ref import adaptive_topk_router_ref, topk_router_ref
+from repro.models import model as M
+from repro.serving import (Request, Scheduler, ServingEngine, SlotPool,
+                           WorkloadConfig, make_trace, percentile)
+
+CFG = tiny_moe()
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+RNG = np.random.default_rng(0)
+PROMPTS = RNG.integers(0, CFG.vocab_size, (4, 8)).astype(np.int32)
+
+
+def naive_decode(cfg, params, prompts, new_tokens, k, *, trainable=None):
+    """The examples/adaptive_serving.py-style full-batch greedy loop —
+    the reference oracle the engine must reproduce token for token."""
+    L = prompts.shape[1]
+    logits, cache = M.prefill(cfg, params, jnp.asarray(prompts), k=k,
+                              trainable=trainable, cache_len=L + new_tokens)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(new_tokens - 1):
+        logits, cache = M.decode_step(cfg, params, cache, tok, L + i, k=k,
+                                      trainable=trainable)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+# ==========================================================================
+# decode parity: slotted engine == naive full-batch loop
+# ==========================================================================
+
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_engine_matches_naive_decode(k, backend):
+    cfg = CFG.replace(kernels=KernelConfig(backend=backend))
+    new = 5
+    ref = naive_decode(cfg, PARAMS, PROMPTS, new, k)
+    eng = ServingEngine(cfg, PARAMS, num_slots=4, slot_len=8 + new,
+                        slot_k=(k,) * 4)
+    reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=new, k=k)
+            for i in range(4)]
+    got = eng.run(reqs).tokens_by_rid()
+    np.testing.assert_array_equal(ref, np.stack([got[i] for i in range(4)]))
+
+
+def test_engine_mixed_slot_k_matches_per_request_naive():
+    """Premium (k=2) and constrained (k=1) slots share one decode step;
+    each request's tokens equal a solo naive run at its own budget."""
+    new = 5
+    eng = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=8 + new,
+                        slot_k=(2, 2, 1, 1))
+    reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=new,
+                    k=(2 if i < 2 else 1)) for i in range(4)]
+    got = eng.run(reqs).tokens_by_rid()
+    for i in range(4):
+        kk = 2 if i < 2 else 1
+        ref = naive_decode(CFG, PARAMS, PROMPTS[i:i + 1], new, kk)[0]
+        np.testing.assert_array_equal(ref, got[i])
+
+
+def test_engine_slot_reuse_and_queueing_parity():
+    """4 requests of different lengths through 2 slots: admission waits,
+    slots are recycled, and every request still decodes exactly as solo."""
+    lens = (4, 8, 4, 6)
+    prompts = [RNG.integers(0, CFG.vocab_size, (L,)).astype(np.int32)
+               for L in lens]
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                        slot_k=(2, 2))
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    got = eng.run(reqs).tokens_by_rid()
+    for i, p in enumerate(prompts):
+        ref = naive_decode(CFG, PARAMS, p[None], 5, 2)[0]
+        np.testing.assert_array_equal(ref, got[i])
+
+
+def test_engine_per_slot_rescaler_matches_naive():
+    """Tiered rescalers are stacked per slot; each slot's output matches a
+    naive decode under that tier's scalar rescaler."""
+    new = 4
+    r_by_k = {k: lora_lib.init_rescalers(CFG, k) for k in (1, 2)}
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=8 + new,
+                        slot_k=(2, 1), rescaler_by_k=r_by_k)
+    reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=new,
+                    k=(2 if i == 0 else 1)) for i in range(2)]
+    got = eng.run(reqs).tokens_by_rid()
+    for i, kk in enumerate((2, 1)):
+        ref = naive_decode(CFG, PARAMS, PROMPTS[i:i + 1], new, kk,
+                           trainable={"rescaler": r_by_k[kk]})[0]
+        np.testing.assert_array_equal(ref, got[i])
+
+
+def test_engine_forced_mode_accumulates_nll():
+    forced = RNG.integers(0, CFG.vocab_size, (4,)).astype(np.int32)
+    eng = ServingEngine(CFG, PARAMS, num_slots=1, slot_len=16, slot_k=(2,))
+    [comp] = eng.run([Request(rid=0, prompt=PROMPTS[0], max_new_tokens=4,
+                              forced=forced)]).completions
+    np.testing.assert_array_equal(comp.tokens, forced)
+    assert comp.nll_sum > 0.0 and np.isfinite(comp.nll_sum)
+
+
+def test_moe_slot_mask_rows_cannot_steal_capacity():
+    """Masked (free-slot / pad) rows must not occupy expert-queue
+    positions: the unmasked rows' outputs equal running those rows alone."""
+    from repro.models import moe_layer
+    key = jax.random.PRNGKey(1)
+    p = moe_layer.init_moe(key, CFG)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (24, 1, CFG.d_model),
+                          jnp.float32)
+    mask = jnp.asarray([0.0] * 8 + [1.0] * 16)
+    out_m, aux_m = moe_layer.apply_moe(p, CFG, x, k=1, slot_mask=mask)
+    out_solo, aux_solo = moe_layer.apply_moe(p, CFG, x[8:], k=1)
+    # identical capacity (static C covers the full row count in both) and
+    # identical relative token order => exact equality
+    np.testing.assert_allclose(np.asarray(out_m[8:]), np.asarray(out_solo))
+    np.testing.assert_allclose(np.asarray(out_m[:8]), 0.0)   # routed nowhere
+    np.testing.assert_allclose(np.asarray(aux_m.activation_counts),
+                               np.asarray(aux_solo.activation_counts))
+
+
+def test_engine_results_independent_of_pool_history():
+    """A slot pool that served earlier traffic (stale cache + last tokens
+    in released slots) must produce byte-identical results to a fresh
+    engine — free slots are masked out of routing, not just ignored."""
+    new = 4
+    first = [Request(rid=100 + i, prompt=PROMPTS[(i + 1) % 4],
+                     max_new_tokens=new) for i in range(4)]
+    reqs = [Request(rid=0, prompt=PROMPTS[0], max_new_tokens=new)]
+
+    used = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16)
+    used.run(first)                                 # dirty the pool
+    got_used = used.run(reqs).tokens_by_rid()[0]
+
+    fresh = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16)
+    got_fresh = fresh.run(reqs).tokens_by_rid()[0]
+    np.testing.assert_array_equal(got_used, got_fresh)
+
+
+# ==========================================================================
+# adaptive router reference
+# ==========================================================================
+
+def test_adaptive_router_uniform_equals_static():
+    logits = jnp.asarray(RNG.normal(size=(12, 6)), jnp.float32)
+    for k in (1, 2, 3):
+        w0, m0, c0 = topk_router_ref(logits, k)
+        w1, m1, c1 = adaptive_topk_router_ref(
+            logits, jnp.full((12,), k, jnp.int32), max_k=3)
+        np.testing.assert_allclose(np.asarray(w0), np.asarray(w1))
+        np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+        np.testing.assert_allclose(np.asarray(c0), np.asarray(c1))
+
+
+def test_adaptive_router_per_token_budgets():
+    logits = jnp.asarray(RNG.normal(size=(6, 8)), jnp.float32)
+    k_tok = jnp.asarray([1, 2, 3, 1, 2, 3], jnp.int32)
+    w, m, counts = adaptive_topk_router_ref(logits, k_tok, max_k=3)
+    # each token activates exactly its budget, weights renormalised
+    np.testing.assert_array_equal(np.asarray(m.sum(-1)), np.asarray(k_tok))
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-6)
+    assert float(counts.sum()) == float(k_tok.sum())
+    # each token's row equals the static router at its own k
+    for t in range(6):
+        w_t, m_t, _ = topk_router_ref(logits[t:t + 1], int(k_tok[t]))
+        np.testing.assert_allclose(np.asarray(w[t]), np.asarray(w_t[0]))
+
+
+# ==========================================================================
+# pool / scheduler / workload mechanics
+# ==========================================================================
+
+def test_slot_pool_allocate_release_write():
+    pool = SlotPool(CFG, num_slots=3, slot_len=8)
+    assert pool.free_slots == [0, 1, 2]
+    s0 = pool.allocate()
+    pool.take(2)
+    assert pool.free_slots == [1]
+    # install a 2-row prefilled cache into slots (0, 2)
+    _, piece = M.prefill(CFG, PARAMS, jnp.asarray(PROMPTS[:2, :4]), k=2,
+                         cache_len=8)
+    pool.write([s0, 2], piece, [4, 4])
+    got = np.asarray(pool.cache["pos0"]["attn"]["k"])
+    want = np.asarray(piece["pos0"]["attn"]["k"])
+    np.testing.assert_allclose(got[:, 0], want[:, 0])
+    np.testing.assert_allclose(got[:, 2], want[:, 1])
+    assert got[:, 1].max() == 0.0          # untouched slot stays zeroed
+    assert list(pool.cache_pos) == [4, 0, 4]
+    pool.advance([0])
+    assert list(pool.cache_pos) == [5, 0, 4]
+    pool.release(0)
+    assert pool.cache_pos[0] == 0 and 0 in pool.free_slots
+    with pytest.raises(AssertionError):
+        pool.release(0)                    # double free
+
+
+def test_scheduler_fifo_per_tier():
+    sched = Scheduler()
+    mk = lambda rid, k: Request(rid=rid, prompt=np.zeros(4, np.int32),
+                                max_new_tokens=1, k=k)
+    for rid, k in ((0, 1), (1, 2), (2, 1), (3, None)):
+        sched.add(mk(rid, k))
+    # slots: 0 -> k=2, 1 -> k=1.  FIFO per tier: rid0 takes the k=1 slot,
+    # rid1 the k=2 slot; rid2 (k=1, no slot left) must NOT block rid3
+    out = sched.admit([0, 1], (2, 1))
+    assert [(r.rid, s) for r, s in out] == [(0, 1), (1, 0)]
+    assert [r.rid for r in sched.queue] == [2, 3]
+    out = sched.admit([0], (2, 1))
+    assert [(r.rid, s) for r, s in out] == [(3, 0)]   # rid2 still waiting
+    assert [r.rid for r in sched.queue] == [2]
+
+
+def test_workload_trace_deterministic_and_mixed():
+    wl = WorkloadConfig(n_requests=64, rate=100.0, prompt_lens=(4, 8),
+                        new_tokens=(2, 4), tier_mix=((2, 0.5), (1, 0.5)),
+                        vocab_size=CFG.vocab_size, seed=3)
+    a, b = make_trace(wl), make_trace(wl)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] == 0.0 and arr[-1] > 0.0
+    ks = {r.k for r in a}
+    assert ks == {1, 2}
+    assert all(r.prompt_len in (4, 8) for r in a)
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0
+    assert np.isnan(percentile([], 95))
+
+
+def test_engine_rejects_oversized_prompt_upfront():
+    """A prompt with no room for a generated token fails BEFORE any work
+    starts — a malformed trace must not abort a run mid-flight."""
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=8)
+    good = Request(rid=0, prompt=PROMPTS[0, :4], max_new_tokens=2)
+    bad = Request(rid=1, prompt=PROMPTS[1], max_new_tokens=2)   # len 8
+    with pytest.raises(ValueError, match=r"requests \[1\]"):
+        eng.run([good, bad])
+    assert eng.n_active == 0                    # nothing was admitted
+    [comp] = eng.run([good]).completions        # engine still usable
+    assert comp.rid == 0
+
+
+def test_engine_rejects_unservable_tier():
+    eng = ServingEngine(CFG, PARAMS, num_slots=1, slot_len=16, slot_k=(2,))
+    with pytest.raises(RuntimeError, match="match no slot tier"):
+        eng.run([Request(rid=0, prompt=PROMPTS[0], max_new_tokens=2, k=1)])
+
+
+def test_engine_truncates_at_slot_capacity():
+    eng = ServingEngine(CFG, PARAMS, num_slots=1, slot_len=10, slot_k=(2,))
+    [comp] = eng.run([Request(rid=0, prompt=PROMPTS[0, :8],
+                              max_new_tokens=64)]).completions
+    # prefill token + one decode write per free cache position (8, 9)
+    assert comp.truncated and comp.n_generated == 3
+
+
+def test_engine_report_summary_keys():
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16)
+    reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=3)
+            for i in range(2)]
+    s = eng.run(reqs).summary()
+    assert s["n_requests"] == 2 and s["gen_tokens"] == 6
+    assert s["requests_per_s"] > 0 and s["ttft_p95_ms"] >= 0
