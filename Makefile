@@ -4,11 +4,15 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-round bench-serve bench-smoke docs-check changes-check ci
+.PHONY: test test-slow bench bench-round bench-serve bench-smoke docs-check changes-check ci
 
-# tier-1 verification (see ROADMAP.md)
+# tier-1 verification (see ROADMAP.md); pytest.ini excludes -m slow here
 test:
 	$(PYTHON) -m pytest -q
+
+# the long-running randomized stress subset (CI runs it in the smoke job)
+test-slow:
+	$(PYTHON) -m pytest -q -m slow
 
 # all paper-table/figure benchmarks + kernel and round-engine timings
 bench:
@@ -36,8 +40,10 @@ changes-check:
 	$(PYTHON) tools/changes_check.py
 
 # local mirror of .github/workflows/ci.yml (keep the two in sync):
-# tier-1 tests, docs-check, benchmark smoke + artifact, CHANGES.md check
+# tier-1 tests, slow subset, docs-check, benchmark smoke + artifact,
+# CHANGES.md check
 ci: changes-check
 	$(PYTHON) -m pytest -x -q
+	$(MAKE) test-slow
 	$(MAKE) docs-check
 	$(MAKE) bench-smoke

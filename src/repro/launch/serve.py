@@ -2,14 +2,16 @@
 
 ``--local`` runs the adaptive-k serving engine (repro.serving) over a
 synthetic open-loop workload on a reduced config — a real request queue,
-slotted KV-cache pool, batched prefill and one compiled mixed-k decode
-step, reporting throughput and TTFT/latency percentiles; without
-``--local`` it builds the sharded serve step for the production mesh (use
-repro.launch.dryrun in this offline container).
+block-paged KV pool (``--kv-layout paged``, sized by ``--block-size`` /
+``--num-blocks``; ``--kv-layout slotted`` for the legacy fixed-slot
+pool), batched prefill and one compiled mixed-k decode step, reporting
+throughput and TTFT/latency percentiles; without ``--local`` it builds
+the sharded serve step for the production mesh (use repro.launch.dryrun
+in this offline container).
 
   PYTHONPATH=src python -m repro.launch.serve --local \
       --arch olmoe-1.3b-6.9b --slots 8 --mix 8:0.5,1:0.5 \
-      --requests 16 --rate 20 --new-tokens 16
+      --requests 16 --rate 20 --new-tokens 16 --block-size 16
 """
 from __future__ import annotations
 
@@ -67,6 +69,17 @@ def main() -> None:
     ap.add_argument("--local", action="store_true")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--slot-len", type=int, default=48)
+    ap.add_argument("--kv-layout", choices=("paged", "slotted"),
+                    default="paged",
+                    help="paged: block-paged KV pool (admission follows "
+                         "block availability); slotted: one fixed-capacity "
+                         "slot per request (the PR 3 layout)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV tokens per page block (paged layout)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="usable KV blocks in the pool; default sizes the "
+                         "pool so every slot can hold a max-length request "
+                         "— set lower to make blocks the scarce resource")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=float("inf"),
                     help="Poisson arrival rate (req/s); inf = closed batch")
@@ -119,9 +132,15 @@ def main() -> None:
         prompt_lens=prompt_lens, new_tokens=(args.new_tokens,),
         tier_mix=mix, vocab_size=cfg.vocab_size)
     engine = ServingEngine(cfg, params, num_slots=args.slots,
-                           slot_len=args.slot_len, slot_k=slot_k)
-    print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens, "
-          f"slot_k={engine.slot_k}")
+                           slot_len=args.slot_len, slot_k=slot_k,
+                           kv_layout=args.kv_layout,
+                           block_size=args.block_size,
+                           num_blocks=args.num_blocks)
+    pool_desc = (f"{engine.pool.num_blocks} x {engine.pool.block_size}"
+                 f"-token KV blocks" if engine.paged
+                 else "slotted KV pool")
+    print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens "
+          f"({pool_desc}), slot_k={engine.slot_k}")
     report = engine.run(make_trace(wl))
     for key, val in report.summary().items():
         print(f"  {key}: {val:.2f}" if isinstance(val, float)

@@ -203,6 +203,47 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# block-paged decode attention (serving/kv_cache.BlockPool)
+# --------------------------------------------------------------------------
+
+def paged_decode_write(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                       k_tok: jnp.ndarray, v_tok: jnp.ndarray,
+                       block_table: jnp.ndarray, cache_pos: jnp.ndarray,
+                       *, page_span: int, window: int):
+    """Scatter one token's K/V per row into the block pool.
+
+    ``k_pool``/``v_pool``: (NB+1, bs, KV, D) — block 0 is the trash block
+    that free rows (block table zeroed) harmlessly write into.
+    ``k_tok``/``v_tok``: (B, KV, D).  Row ``r`` writes logical slot
+    ``pos % page_span`` (ring) or ``pos`` (linear), i.e. block-table entry
+    ``slot // bs`` at offset ``slot % bs``.
+    """
+    bs = k_pool.shape[1]
+    B = k_tok.shape[0]
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos), (B,))
+    logical = cp % page_span if window > 0 else cp
+    bi = block_table[jnp.arange(B), logical // bs]
+    off = logical % bs
+    return (k_pool.at[bi, off].set(k_tok),
+            v_pool.at[bi, off].set(v_tok))
+
+
+def paged_gather(pool: jnp.ndarray, block_table: jnp.ndarray,
+                 page_span: int) -> jnp.ndarray:
+    """Gather each row's KV pages into a contiguous (B, page_span, KV, D)
+    view — the exact layout the slotted :func:`decode_attention` consumes,
+    so the paged and slotted decode steps share one score/softmax graph
+    (and stay bitwise-comparable).  Unallocated table entries gather the
+    trash block; anything past a row's valid length is masked by the
+    per-row validity in :func:`decode_attention`, so freed or padding
+    blocks can never leak into scores."""
+    B, MB = block_table.shape
+    bs = pool.shape[1]
+    pages = pool[block_table]                  # (B, MB, bs, KV, D)
+    return pages.reshape(B, MB * bs, *pool.shape[2:])[:, :page_span]
+
+
+# --------------------------------------------------------------------------
 # full attention sub-layer (projections + rope + attention + output)
 # --------------------------------------------------------------------------
 
@@ -210,9 +251,16 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                     *, lora: Optional[dict] = None, lora_scale: float = 0.0,
                     cache: Optional[dict] = None,
                     cache_pos: Optional[jnp.ndarray] = None,
-                    return_cache: bool = False):
+                    return_cache: bool = False,
+                    block_table: Optional[jnp.ndarray] = None,
+                    page_span: Optional[int] = None):
     """x: (B,S,D_model).  Training/prefill when ``cache`` is None or being
     built; decode (S==1) when ``cache`` holds the K/V ring.
+
+    ``block_table``/``page_span``: block-paged decode — the cache leaves
+    are the global block pool (NB+1, bs, KV, D) instead of per-row rings;
+    each row's pages are selected by its block-table row and gathered back
+    into the slotted layout before attending (see paged_gather).
 
     Returns (out, new_cache) where new_cache is None unless requested.
     """
@@ -235,7 +283,21 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None and cache_pos is not None and S == 1:
+    if (cache is not None and cache_pos is not None and S == 1
+            and block_table is not None):
+        # paged decode: scatter this token's K/V into the row's current
+        # block, gather the row's pages into the slotted layout, and run
+        # the same masked decode attention as the slotted path.
+        k_pool, v_pool = paged_decode_write(
+            cache["k"], cache["v"], k[:, 0], v[:, 0], block_table,
+            cache_pos, page_span=page_span, window=cfg.attention_window)
+        kg = paged_gather(k_pool, block_table, page_span)
+        vg = paged_gather(v_pool, block_table, page_span)
+        out = decode_attention(q, kg, vg, cache_pos,
+                               window=cfg.attention_window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": k_pool, "v": v_pool}
+    elif cache is not None and cache_pos is not None and S == 1:
         # decode: write this token's K/V into the ring/linear cache.
         # ``cache_pos`` may be a scalar (uniform batch) or a (B,) vector of
         # per-row positions (slotted serving decode) — the vector case

@@ -126,7 +126,8 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
                  positions, *, lora, rescaler, lora_scale, k,
                  cache=None, cache_pos=None, return_cache=False,
                  deterministic=True, num_groups=1, inner_act_fn=None,
-                 outer_act_fn=None, moe_shard_fns=None, slot_mask=None):
+                 outer_act_fn=None, moe_shard_fns=None, slot_mask=None,
+                 block_table=None, page_span=None, no_drop=False):
     def _reshard(t):
         # force the residual add's output back to the between-block
         # sharding so GSPMD lowers the partial-sum as a reduce-scatter
@@ -147,7 +148,8 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
             p["attn"], cfg, h, positions, lora=lg.get("attn"),
             lora_scale=lora_scale,
             cache=(cache or {}).get("attn"), cache_pos=cache_pos,
-            return_cache=return_cache)
+            return_cache=return_cache, block_table=block_table,
+            page_span=page_span)
         if mc is not None:
             new_cache["attn"] = mc
     else:
@@ -167,7 +169,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
             p["moe"], cfg, h2, k=k, rescaler=rescaler,
             lora=lg.get("moe"), lora_scale=lora_scale,
             deterministic=deterministic, num_groups=num_groups,
-            shard_fns=moe_shard_fns, slot_mask=slot_mask)
+            shard_fns=moe_shard_fns, slot_mask=slot_mask, no_drop=no_drop)
         x = _reshard(x + h2)
     elif cfg.d_ff > 0:
         h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
@@ -187,7 +189,8 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 cache=None, cache_pos=None, return_cache=False,
                 remat=False, remat_chunk=0, deterministic=True,
                 num_groups=1, act_fn=None, inner_act_fn=None,
-                moe_shard_fns=None, slot_mask=None):
+                moe_shard_fns=None, slot_mask=None, block_table=None,
+                page_span=None, no_drop=False):
     P = cfg.pattern_period
     trainable = trainable or {}
     lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
@@ -231,7 +234,9 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 deterministic=deterministic, num_groups=num_groups,
                 inner_act_fn=inner_act_fn,
                 outer_act_fn=act_fn if inner_act_fn is not None else None,
-                moe_shard_fns=moe_shard_fns, slot_mask=slot_mask)
+                moe_shard_fns=moe_shard_fns, slot_mask=slot_mask,
+                block_table=block_table, page_span=page_span,
+                no_drop=no_drop)
             if aux is not None:
                 counts[key] = aux.activation_counts
             if nc is not None:
@@ -415,8 +420,38 @@ def init_cache(cfg, batch: int, seq_len: int) -> PyTree:
     return cache
 
 
+def init_paged_cache(cfg, num_slots: int, num_blocks: int,
+                     block_size: int) -> PyTree:
+    """Zeroed block-paged decode cache (leading axis n_periods).
+
+    Attention K/V live in a global pool of ``num_blocks + 1`` fixed-size
+    blocks — block 0 is the null/trash block that unallocated block-table
+    entries point at — instead of per-slot contiguous rows.  Mamba SSM
+    state is O(1) per request, so it stays per-slot (``num_slots`` rows on
+    axis 1), exactly as in :func:`init_cache`."""
+    P = cfg.pattern_period
+    n_periods = cfg.num_layers // P
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {}
+    for pos in range(P):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            hd = cfg.head_dim_
+            shape = (n_periods, num_blocks + 1, block_size,
+                     cfg.n_kv_heads, hd)
+            c = {"attn": {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}}
+        else:
+            base = ssm_mod.init_mamba_cache(cfg, num_slots)
+            c = {"ssm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (n_periods,) + t.shape), base)}
+        cache[f"pos{pos}"] = c
+    return cache
+
+
 def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
-                num_groups=1, slot_mask=None):
+                num_groups=1, slot_mask=None, block_table=None,
+                page_span=None, no_drop=False):
     """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int, or a
     (B,) vector of per-row positions — the serving engine's slotted decode,
     where every cache slot sits at a different depth (serving/engine.py).
@@ -424,6 +459,13 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
     length-B tuple of per-slot expert budgets (FLAME's adaptive-k serving);
     ``slot_mask``: optional dynamic (B,) 0/1 vector masking rows (free
     serving slots) out of MoE routing entirely.
+
+    ``block_table``: optional (B, max_blocks) int32 table selecting this
+    step's KV pages per row — the cache's attention leaves are then the
+    block-paged pool from :func:`init_paged_cache`.  ``page_span`` (static
+    int) is each row's logical capacity in tokens: the ring modulus for
+    sliding-window models and the mask cap for the gathered pages
+    (serving/kv_cache.BlockPool).
     Returns (logits (B,1,V[,K]), new_cache)."""
     x = embed_tokens(params, cfg, tokens)
     B = x.shape[0]
@@ -431,13 +473,15 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
     positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos)
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable, k=k,
                         cache=cache, cache_pos=pos, return_cache=True,
-                        num_groups=num_groups, slot_mask=slot_mask)
+                        num_groups=num_groups, slot_mask=slot_mask,
+                        block_table=block_table, page_span=page_span,
+                        no_drop=no_drop)
     h = rms_norm(params["final_norm"], h, cfg.rms_eps)
     return lm_head(params, cfg, h), ys["cache"]
 
 
 def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
-            act_fn=None, cache_len=None, slot_mask=None):
+            act_fn=None, cache_len=None, slot_mask=None, no_drop=False):
     """Forward pass that also builds the decode cache.
     Returns (logits_last (B,1,V[,K]), cache).
 
@@ -454,7 +498,7 @@ def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
     x = embed_tokens(params, cfg, tokens)
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable,
                         k=k, return_cache=True, num_groups=num_groups,
-                        act_fn=act_fn, slot_mask=slot_mask)
+                        act_fn=act_fn, slot_mask=slot_mask, no_drop=no_drop)
     cache = ys["cache"]
     target = cache_len_for(cfg, cache_len or S)
 

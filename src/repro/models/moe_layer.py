@@ -99,7 +99,8 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
               rng: Optional[jax.Array] = None,
               num_groups: int = 1,
               shard_fns: Optional[dict] = None,
-              slot_mask: Optional[jnp.ndarray] = None):
+              slot_mask: Optional[jnp.ndarray] = None,
+              no_drop: bool = False):
     """x: (B, S, D) -> (out (B,S,D), MoEAux).
 
     ``k`` is static (client budget k_i): an ``int`` applied to every token,
@@ -115,6 +116,16 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
     cannot occupy expert-queue capacity that real rows need.  The serving
     engine masks its free slots this way; without it, garbage rows in a
     slotted decode batch could evict real tokens under GShard capacity.
+
+    ``no_drop``: loss-free dispatch — capacity covers the worst case
+    (every token could rank any one expert in its top-k), so no token can
+    EVER fall back to the residual stream.  This is the serving engine's
+    default contract: with capacity-limited dispatch, which tokens drop
+    depends on which rows happen to share a batch, so a request's output
+    would depend on the admission schedule — continuous batching must not
+    change results.  Costs dispatch width (C = T_g instead of
+    ~T_g·k/E·cf): training and the throughput-mode bench keep the
+    capacity-limited default.
 
     ``num_groups``: GShard routing groups.  Capacity and the dispatch/
     combine one-hots are *per-group* ``(G, T_g, E, C_g)`` so when the token
@@ -178,7 +189,11 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
     # path a mixed batch's capacity follows sum(k_i), so constrained slots
     # genuinely shrink the expert workload (FLAME's FLOPs-adaptivity,
     # per slot instead of per client).
-    if adaptive:
+    if no_drop:
+        # one expert can receive at most one copy of each token, so
+        # C = T_g guarantees zero overflow (rounded up for lane layouts)
+        C = max(8, ((Tg + 7) // 8) * 8)
+    elif adaptive:
         C = _capacity_from_assignments(S * sum(k_slots), E, m.capacity_factor)
     else:
         C = _capacity(Tg, E, k, m.capacity_factor)

@@ -1,13 +1,15 @@
-"""Adaptive-k serving: continuous batching over a slotted KV cache.
+"""Adaptive-k serving: continuous batching over a paged KV cache.
 
 The subsystem has four layers (docs/architecture.md §Serving):
 
-* :mod:`repro.serving.kv_cache`  — ``SlotPool``: a fixed-capacity slotted
-  (paged-lite) KV-cache pool with allocate/release and per-slot
-  ``cache_pos``, so requests of different lengths share one compiled
-  decode step;
+* :mod:`repro.serving.kv_cache`  — ``BlockPool``: the block-paged KV pool
+  (global fixed-size KV blocks, per-request block tables, on-demand
+  allocation, reservation-backed admission math) and ``SlotPool``, the
+  legacy monolithic slotted pool kept as the differential-test oracle;
 * :mod:`repro.serving.scheduler` — ``Request``/``Scheduler``: FIFO queue
-  with tier-aware admission into free slots;
+  with tier-aware admission into free slots, plus an optional can-admit
+  resource predicate (projected block need) with per-tier head-of-line
+  fairness;
 * :mod:`repro.serving.engine`    — ``ServingEngine``: the continuous-
   batching loop; one jitted decode step over the whole slot batch with
   **per-slot expert budget k** (FLAME's adaptive-k at serving time) and
@@ -16,6 +18,6 @@ The subsystem has four layers (docs/architecture.md §Serving):
   (Poisson arrivals, length/tier mixes) and latency percentile helpers.
 """
 from .engine import ServingEngine, ServingReport  # noqa: F401
-from .kv_cache import SlotPool  # noqa: F401
+from .kv_cache import BlockPool, SlotPool  # noqa: F401
 from .scheduler import Completion, Request, Scheduler  # noqa: F401
 from .workload import WorkloadConfig, make_trace, percentile  # noqa: F401

@@ -11,17 +11,26 @@ hence the expert FLOPs — follows ``sum(slot_k)`` instead of
 applied per slot the same way: each tier's trained ``s_i`` is stacked into
 a ``(n_periods, num_slots)`` leaf that the scan slices per layer.
 
+The KV cache behind the slots is block-paged by default
+(``kv_layout="paged"``, kv_cache.BlockPool): attention K/V live in a
+shared pool of fixed-size blocks, each row carries a block table, and
+admission is gated on the request's projected block need — device KV
+bytes follow tokens in flight instead of ``num_slots × slot_len``.  The
+PR 3 monolithic pool survives as ``kv_layout="slotted"``, the
+differential-test oracle (tests/test_paged_kv.py proves the two are
+token-for-token identical).
+
 Engine loop (one ``step()``):
 
   1. requests whose arrival time has passed join the scheduler queue;
   2. the scheduler packs waiting requests into free slots (FIFO per
-     tier); admitted requests are prefilled — batched by prompt length,
-     padded to power-of-two batch buckets to bound recompiles — and their
-     caches installed into the pool (``SlotPool.write``), emitting the
-     first generated token (TTFT);
+     tier, block-availability predicate when paged); admitted requests
+     are prefilled — batched by prompt length, padded to power-of-two
+     batch buckets to bound recompiles — and their caches installed into
+     the pool (``write``), emitting the first generated token (TTFT);
   3. one decode step advances every active slot by a token; finished
      sequences (budget reached / slot full) are evicted and their slots
-     released.
+     (and KV blocks) released.
 
 Sampling is greedy (argmax); a request may instead carry ``forced``
 continuation tokens, which the engine feeds back while accumulating their
@@ -39,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as model_lib
-from .kv_cache import SlotPool
+from .kv_cache import BlockPool, SlotPool
 from .scheduler import Completion, Request, Scheduler
 from .workload import percentile
 
@@ -118,17 +127,41 @@ class ServingEngine:
     ``rescaler_by_k``: optional ``{k: rescaler tree}`` — each tier's
     trained FLAME ``s_i``, applied per slot during decode and per batch
     during prefill.
+
+    ``kv_layout``: ``"paged"`` (default) backs the slots with a
+    :class:`BlockPool` — attention K/V in ``num_blocks`` shared
+    ``block_size``-token blocks, admission gated on each request's
+    projected block need, so device KV bytes follow tokens in flight;
+    ``"slotted"`` keeps the PR 3 monolithic :class:`SlotPool` (the
+    differential-test oracle).  Both layouts are token-for-token
+    identical (tests/test_paged_kv.py).  Models with no attention layers
+    (pure SSM) have O(1)/request state and always use the slotted pool.
+
+    ``no_drop`` (default True): loss-free MoE dispatch — with
+    capacity-limited GShard dispatch, which tokens overflow an expert
+    depends on which rows share a prefill bucket or decode step, so a
+    request's OUTPUT would depend on the admission schedule.  Serving
+    must not let batching change results (it is also what makes the
+    paged-vs-slotted differential well-defined).  ``no_drop=False``
+    restores capacity-limited dispatch, where expert compute follows
+    ``sum(slot_k)`` — the throughput mode the adaptive-k bench measures.
     """
 
     def __init__(self, cfg, params: PyTree, *, lora: Optional[PyTree] = None,
                  rescaler_by_k: Optional[Dict[int, PyTree]] = None,
                  num_slots: int = 8, slot_len: int = 64,
-                 slot_k: Optional[Sequence[int]] = None):
+                 slot_k: Optional[Sequence[int]] = None,
+                 kv_layout: str = "paged", block_size: int = 16,
+                 num_blocks: Optional[int] = None, no_drop: bool = True):
         assert cfg.num_codebooks == 0, "serving engine: text models only"
+        assert kv_layout in ("paged", "slotted"), kv_layout
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
         self.slot_len = slot_len
+        has_attn = any(cfg.layer_kind(p) == "attn"
+                       for p in range(cfg.pattern_period))
+        self.paged = kv_layout == "paged" and has_attn
         if cfg.moe.enabled:
             resolved = tuple(int(v) for v in (
                 slot_k if slot_k is not None
@@ -146,12 +179,34 @@ class ServingEngine:
         self._rescaler_by_k = rescaler_by_k
         self._decode_trainable = self._build_decode_trainable()
 
-        self.pool = SlotPool(cfg, num_slots, slot_len)
+        if self.paged:
+            self.pool = BlockPool(cfg, num_slots, slot_len,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks)
+            # per-tier block quotas (proportional to the tier's slot
+            # share, floored at one full request): a tier may exceed its
+            # quota only while no OTHER tier has requests waiting, so a
+            # flood of long premium requests can saturate an idle pool
+            # but can never starve economy admission once economy
+            # traffic queues up — freed blocks then flow to the
+            # under-quota tier (tests/test_serving.py adversarial traces)
+            counts: Dict[Optional[int], int] = {}
+            for t in self.slot_k:
+                counts[t] = counts.get(t, 0) + 1
+            self._tier_quota = {
+                t: max(self.pool.blocks_per_slot,
+                       self.pool.num_blocks * c // num_slots)
+                for t, c in counts.items()}
+            self._tier_reserved = {t: 0 for t in counts}
+        else:
+            self.pool = SlotPool(cfg, num_slots, slot_len)
         self.scheduler = Scheduler()
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
         self._last_tok = np.zeros((num_slots, 1), np.int32)
 
         moe_k = self._moe_k
+        page_span = self.pool.attn_len if self.paged else None
+        self.no_drop = no_drop
 
         # the pool cache is donated: the engine replaces its reference with
         # the returned cache every step, and donation lets XLA update the
@@ -159,19 +214,43 @@ class ServingEngine:
         # ``active``/``real`` masks free slots / prefill-bucket padding rows
         # out of MoE routing (budget 0), so garbage rows can never consume
         # expert capacity a real request needs.
-        @partial(jax.jit, donate_argnums=(2,))
-        def _decode_fn(params, trainable, cache, tokens, pos, active):
-            logits, new_cache = model_lib.decode_step(
-                cfg, params, cache, tokens, pos, trainable=trainable,
-                k=moe_k, slot_mask=active if cfg.moe.enabled else None)
-            return logits[:, 0].astype(jnp.float32), new_cache
+        if self.paged:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _decode_fn(params, trainable, cache, tokens, pos, active,
+                           tables):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    block_table=tables, page_span=page_span,
+                    no_drop=no_drop)
+                return logits[:, 0].astype(jnp.float32), new_cache
+        else:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _decode_fn(params, trainable, cache, tokens, pos, active):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    no_drop=no_drop)
+                return logits[:, 0].astype(jnp.float32), new_cache
 
         @partial(jax.jit, static_argnames=("k",))
         def _prefill_fn(params, trainable, prompts, real, k):
-            logits, cache = model_lib.prefill(
-                cfg, params, prompts, trainable=trainable, k=k,
-                cache_len=slot_len,
-                slot_mask=real if cfg.moe.enabled else None)
+            if no_drop and cfg.moe.enabled:
+                # loss-free prefill, one routing group PER ROW with
+                # capacity = the row's own token count: a row's result
+                # cannot depend on co-batched rows (bucket-padding rows
+                # isolate themselves), and dispatch cost stays linear in
+                # the bucket instead of quadratic (C would otherwise be
+                # the whole bucket's token count)
+                logits, cache = model_lib.prefill(
+                    cfg, params, prompts, trainable=trainable, k=k,
+                    cache_len=slot_len, num_groups=prompts.shape[0],
+                    no_drop=True)
+            else:
+                logits, cache = model_lib.prefill(
+                    cfg, params, prompts, trainable=trainable, k=k,
+                    cache_len=slot_len,
+                    slot_mask=real if cfg.moe.enabled else None)
             return logits[:, 0].astype(jnp.float32), cache
 
         self._decode_fn = _decode_fn
@@ -204,15 +283,81 @@ class ServingEngine:
         return tr or None
 
     # ------------------------------------------------------------------ admit
+    @staticmethod
+    def _max_new(req: Request) -> int:
+        if req.forced is not None:
+            return min(req.max_new_tokens, len(req.forced))
+        return req.max_new_tokens
+
+    def _projected_tokens(self, req: Request) -> int:
+        """Cache positions the request will write over its lifetime: the
+        prompt plus one decode write per generated token after the first
+        (the prefill token costs no extra position).  Floored at the
+        prompt length: prefill installs all L positions even when
+        ``max_new`` is 0 (the engine still emits the prefill token)."""
+        return req.prompt_len + max(self._max_new(req), 1) - 1
+
     def _admit(self, report: ServingReport) -> int:
         free = self.pool.free_slots
         if not free or not len(self.scheduler):
             return 0
-        assignments = self.scheduler.admit(free, self.slot_k)
+        can_admit = None
+        if self.paged:
+            # account blocks as the scheduler accepts: each accepted
+            # request is guaranteed a slot, so its projected need comes
+            # off the headroom before the next request is considered.
+            # The tier quota binds only under cross-tier contention
+            # (another tier waiting) — work-conserving when the pool is
+            # otherwise idle, starvation-free when it is not.
+            booked = 0
+            booked_by_tier: Dict[Optional[int], int] = {}
+            # slot tiers contended by the waiting queue: a wildcard
+            # (k=None) waiter can sit in any tier, so it contends with
+            # all of them
+            waiting_tiers: set = set()
+            for r in self.scheduler.queue:
+                if r.k is None:
+                    waiting_tiers.update(self._tier_quota)
+                    break
+                waiting_tiers.add(r.k)
+
+            # escrow for the oldest starved waiter: the FIRST request of
+            # the FIFO scan rejected for block AVAILABILITY (not quota)
+            # gets its need earmarked — younger requests may only book
+            # blocks beyond it, so freed blocks accumulate for it
+            # instead of being re-consumed forever by a cross-tier
+            # stream of small requests (its wait is bounded by in-flight
+            # request lifetimes)
+            escrow = 0
+            escrow_rid: Optional[int] = None
+
+            def can_admit(req: Request, slot: int) -> bool:
+                nonlocal booked, escrow, escrow_rid
+                tier = self.slot_k[slot]
+                need = self.pool.blocks_needed(self._projected_tokens(req))
+                avail = self.pool.available_blocks - booked
+                if escrow_rid is not None and req.rid != escrow_rid:
+                    avail -= escrow
+                if need > avail:
+                    if escrow_rid is None or escrow_rid == req.rid:
+                        escrow, escrow_rid = need, req.rid
+                    return False
+                held = (self._tier_reserved[tier]
+                        + booked_by_tier.get(tier, 0) + need)
+                if held > self._tier_quota[tier] and waiting_tiers - {tier}:
+                    return False
+                booked += need
+                booked_by_tier[tier] = booked_by_tier.get(tier, 0) + need
+                return True
+        assignments = self.scheduler.admit(free, self.slot_k, can_admit)
         groups: Dict[Tuple[int, Optional[int]],
                      List[Tuple[Request, int]]] = {}
         for req, slot in assignments:
             self.pool.take(slot)
+            if self.paged:
+                need = self.pool.blocks_needed(self._projected_tokens(req))
+                self.pool.reserve(slot, self._projected_tokens(req))
+                self._tier_reserved[self.slot_k[slot]] += need
             assert req.prompt_len + 1 <= self.slot_len, \
                 f"request {req.rid}: prompt {req.prompt_len} leaves no room" \
                 f" in a {self.slot_len}-token slot"
@@ -235,9 +380,7 @@ class ServingEngine:
             report.prefill_s.append(tft - admitted)
 
             for j, (req, slot) in enumerate(items):
-                max_new = req.max_new_tokens
-                if req.forced is not None:
-                    max_new = min(max_new, len(req.forced))
+                max_new = self._max_new(req)
                 tok, nll = self._pick(logits_np[j], req, 0)
                 self._active[slot] = _ActiveSlot(
                     req=req, tokens=[tok], nll=nll, admitted=admitted,
@@ -260,16 +403,23 @@ class ServingEngine:
     # ----------------------------------------------------------------- decode
     def _decode_once(self, report: ServingReport) -> None:
         t_start = time.perf_counter()
+        active = [s for s, a in enumerate(self._active) if a is not None]
         active_mask = jnp.asarray(
             [a is not None for a in self._active], jnp.float32)
+        extra = ()
+        if self.paged:
+            # allocate each active row's next write block (guaranteed to
+            # succeed: covered by the reservation made at admit)
+            self.pool.prepare_decode(active)
+            extra = (self.pool.tables(),)
         logits, new_cache = self._decode_fn(
             self.params, self._decode_trainable, self.pool.cache,
-            jnp.asarray(self._last_tok), self.pool.positions(), active_mask)
+            jnp.asarray(self._last_tok), self.pool.positions(), active_mask,
+            *extra)
         logits_np = np.asarray(logits)              # blocks until ready
         self.pool.cache = new_cache
         report.decode_step_s.append(time.perf_counter() - t_start)
 
-        active = [s for s, a in enumerate(self._active) if a is not None]
         self.pool.advance(active)
         for slot in active:
             a = self._active[slot]
@@ -290,6 +440,9 @@ class ServingEngine:
             finished=self._now(), nll_sum=a.nll,
             truncated=len(a.tokens) < a.max_new))
         self._active[slot] = None
+        if self.paged:
+            self._tier_reserved[self.slot_k[slot]] -= \
+                self.pool.reserved_for(slot)
         self.pool.release(slot)
 
     # ------------------------------------------------------------------- loop
@@ -319,6 +472,9 @@ class ServingEngine:
             raise ValueError(
                 f"requests {too_long}: prompt leaves no room for a "
                 f"generated token in a {self.slot_len}-token slot")
+        # (no block-capacity fail-fast needed: blocks_needed caps at the
+        # per-request span and the pool holds >= one span by construction,
+        # so an empty pool can always admit any slot-length-valid request)
         pending = sorted(requests, key=lambda r: r.arrival)
         report = ServingReport(completions=[], num_slots=self.num_slots,
                                slot_k=self.slot_k)

@@ -1,24 +1,36 @@
-"""Slotted (paged-lite) KV-cache pool.
+"""KV-cache pools for the serving engine: slotted and block-paged.
 
-One device-resident decode cache of ``num_slots`` fixed-capacity slots
-(``model.init_cache`` with ``batch=num_slots``) plus host-side slot
-bookkeeping: a free list and a per-slot ``cache_pos``.  Requests of
-different lengths occupy different slots of the SAME arrays, so the engine
-drives them all through one compiled ``decode_step`` — the per-slot
-positions become a ``(num_slots,)`` vector threaded into attention
-(scatter write + per-row validity mask, see models/attention.py).
+:class:`SlotPool` is the slotted (paged-lite) pool: one device-resident
+decode cache of ``num_slots`` fixed-capacity slots (``model.init_cache``
+with ``batch=num_slots``) plus host-side bookkeeping — a free list and a
+per-slot ``cache_pos``.  Whole-slot granularity: a short request pins the
+same ``slot_len`` of K/V a long one does.
 
-This is the "paged-lite" point on the vLLM axis: whole-slot granularity
-instead of fixed-size pages — no block tables, but the same decoupling of
-request lifetime from batch shape that continuous batching needs.
+:class:`BlockPool` is the block-paged pool (the vLLM point on the same
+axis): attention K/V live in a global pool of fixed-size blocks, each
+request row owns a *block table* mapping its logical positions to pool
+blocks, blocks are allocated on demand at prefill/decode time and freed at
+eviction — so device KV bytes follow tokens in flight, not
+``num_slots × slot_len``.  Block id 0 is a reserved null/trash block:
+zeroed block-table entries (free rows, unallocated tail) point at it, its
+contents are never read (per-row validity masks them out of scores), and
+writes from inactive rows land there harmlessly.
 
-All cache leaves carry the layout ``(n_periods, batch, ...)`` — batch is
-axis 1 for both attention K/V and Mamba state — which is what
-:meth:`SlotPool.write` relies on.
+Admission math: a request needs
+``blocks_needed(min(prompt_len + max_new - 1, page_span))`` blocks over
+its lifetime (``page_span`` = per-request logical capacity; the ring
+modulus for sliding-window models).  ``reserve`` books that projection at
+admit time so on-demand allocation during decode can never fail; the
+``available_blocks`` headroom — free blocks minus outstanding unallocated
+reservations — is what the scheduler's can-admit predicate consults.
+
+All per-row cache leaves carry the layout ``(n_periods, batch, ...)``;
+paged attention leaves are ``(n_periods, num_blocks + 1, block_size, KV,
+head_dim)``.
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,21 +41,21 @@ from ..models import model as model_lib
 PyTree = Any
 
 
-class SlotPool:
-    """Fixed-capacity slotted KV-cache pool with allocate/release."""
+class _RowPool:
+    """Decode-row bookkeeping shared by both KV pools: a free list of
+    rows and a per-row ``cache_pos`` — the machinery that decouples
+    request lifetime from the compiled step's batch shape."""
 
     def __init__(self, cfg, num_slots: int, slot_len: int):
         assert num_slots >= 1 and slot_len >= 1, (num_slots, slot_len)
         self.cfg = cfg
         self.num_slots = num_slots
         self.slot_len = slot_len
-        # attention slots hold min(window, slot_len) positions (ring cache)
+        # attention rows hold min(window, slot_len) positions (ring cache)
         self.attn_len = model_lib.cache_len_for(cfg, slot_len)
-        self.cache: PyTree = model_lib.init_cache(cfg, num_slots, slot_len)
         self.cache_pos = np.zeros((num_slots,), np.int32)
         self._free: List[int] = list(range(num_slots))
 
-    # ------------------------------------------------------------ bookkeeping
     @property
     def free_slots(self) -> List[int]:
         """Free slot ids, lowest first (deterministic allocation order)."""
@@ -55,7 +67,7 @@ class SlotPool:
 
     def allocate(self) -> int:
         if not self._free:
-            raise RuntimeError("SlotPool exhausted")
+            raise RuntimeError(f"{type(self).__name__}: no free rows")
         self._free.sort()
         return self._free.pop(0)
 
@@ -67,6 +79,33 @@ class SlotPool:
         assert 0 <= slot < self.num_slots and slot not in self._free, slot
         self.cache_pos[slot] = 0
         self._free.append(slot)
+
+    def positions(self) -> jnp.ndarray:
+        """Per-slot decode positions as a device vector."""
+        return jnp.asarray(self.cache_pos)
+
+    def advance(self, slots: Sequence[int]) -> None:
+        """One token decoded in each of ``slots``."""
+        self.cache_pos[np.asarray(list(slots), np.int32)] += 1
+
+    def slot_full(self, slot: int) -> bool:
+        """No room left to write the next decode token (linear cache);
+        ring (sliding-window) caches never fill."""
+        if self.cfg.attention_window > 0:
+            return False
+        return int(self.cache_pos[slot]) >= self.attn_len
+
+    def kv_bytes(self) -> int:
+        """Device bytes held by the pool's cache tree."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
+
+
+class SlotPool(_RowPool):
+    """Fixed-capacity slotted KV-cache pool with allocate/release."""
+
+    def __init__(self, cfg, num_slots: int, slot_len: int):
+        super().__init__(cfg, num_slots, slot_len)
+        self.cache: PyTree = model_lib.init_cache(cfg, num_slots, slot_len)
 
     # ------------------------------------------------------------- cache I/O
     def write(self, slots: Sequence[int], piece: PyTree,
@@ -87,17 +126,216 @@ class SlotPool:
         self.cache = jax.tree.map(put, self.cache, piece)
         self.cache_pos[idx] = np.asarray(list(lengths), np.int32)
 
-    def positions(self) -> jnp.ndarray:
-        """Per-slot decode positions as a device vector."""
-        return jnp.asarray(self.cache_pos)
 
-    def advance(self, slots: Sequence[int]) -> None:
-        """One token decoded in each of ``slots``."""
-        self.cache_pos[np.asarray(list(slots), np.int32)] += 1
+class BlockPool(_RowPool):
+    """Block-paged KV-cache pool: global block pool + per-row block tables.
 
-    def slot_full(self, slot: int) -> bool:
-        """No room left to write the next decode token (linear cache);
-        ring (sliding-window) caches never fill."""
-        if self.cfg.attention_window > 0:
-            return False
-        return int(self.cache_pos[slot]) >= self.attn_len
+    ``num_slots`` decode rows (the compiled step's batch) share
+    ``num_blocks`` usable KV blocks of ``block_size`` tokens each (device
+    arrays hold one extra trash block at id 0).  Rows and blocks are
+    decoupled: admission needs a free row AND the request's projected
+    block count (``can_admit``); blocks are reserved at admit, allocated
+    lazily (prompt blocks at :meth:`write`, decode blocks at
+    :meth:`prepare_decode`), and returned at :meth:`release`.
+
+    Mamba SSM state is O(1)/request and stays per-row (never paged).
+    """
+
+    def __init__(self, cfg, num_slots: int, slot_len: int,
+                 block_size: int = 16, num_blocks: int = None):
+        assert block_size >= 1, block_size
+        super().__init__(cfg, num_slots, slot_len)
+        self.block_size = block_size
+        # attn_len doubles as the per-request logical capacity (the ring
+        # modulus for sliding-window models)
+        self.blocks_per_slot = -(-self.attn_len // block_size)
+        if num_blocks is None:
+            # full provisioning: every row can hold a max-length request,
+            # so admission degenerates to slot availability (parity with
+            # SlotPool); size it down to make blocks the scarce resource.
+            num_blocks = num_slots * self.blocks_per_slot
+        assert num_blocks >= self.blocks_per_slot, (
+            f"num_blocks={num_blocks} cannot hold even one max-length "
+            f"request ({self.blocks_per_slot} blocks)")
+        self.num_blocks = num_blocks
+        self.cache: PyTree = model_lib.init_paged_cache(
+            cfg, num_slots, num_blocks, block_size)
+        self.block_table = np.zeros((num_slots, self.blocks_per_slot),
+                                    np.int32)
+        self._free_blocks: List[int] = list(range(1, num_blocks + 1))
+        self._reserved = np.zeros((num_slots,), np.int64)
+        self._nalloc = np.zeros((num_slots,), np.int64)
+        self.peak_blocks = 0
+
+    def tables(self) -> jnp.ndarray:
+        """Per-row block tables as a device array for the decode step."""
+        return jnp.asarray(self.block_table)
+
+    # ----------------------------------------------------- block bookkeeping
+    def blocks_needed(self, n_tokens: int) -> int:
+        """Blocks covering ``n_tokens`` logical positions (ring-capped)."""
+        return -(-min(max(int(n_tokens), 1), self.attn_len)
+                 // self.block_size)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return int(self._nalloc.sum())
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks not spoken for by outstanding reservations."""
+        debt = int((self._reserved - self._nalloc).sum())
+        return len(self._free_blocks) - debt
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.blocks_needed(n_tokens) <= self.available_blocks
+
+    def reserved_for(self, slot: int) -> int:
+        """Blocks currently reserved by ``slot``'s request."""
+        return int(self._reserved[slot])
+
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Book the request's lifetime block projection at admit time, so
+        later on-demand allocation (prepare_decode) can never fail."""
+        need = self.blocks_needed(n_tokens)
+        assert self._reserved[slot] == 0 and self._nalloc[slot] == 0, slot
+        assert need <= self.available_blocks, (
+            f"reserve({slot}, {n_tokens}): need {need} > available "
+            f"{self.available_blocks}")
+        self._reserved[slot] = need
+
+    def _alloc_block(self, slot: int) -> None:
+        assert self._nalloc[slot] < self._reserved[slot], (
+            f"slot {slot}: allocation would exceed its reservation "
+            f"({self._reserved[slot]} blocks)")
+        # pop the list head (NOT lowest-id): deterministic, and it keeps a
+        # test-injected permutation (permute_free) in force — physical
+        # block order must be invisible to results
+        bid = self._free_blocks.pop(0)
+        self.block_table[slot, self._nalloc[slot]] = bid
+        self._nalloc[slot] += 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+
+    def alloc_prompt(self, slot: int, prompt_len: int) -> None:
+        """Allocate the blocks the prompt's K/V will be installed into."""
+        while self._nalloc[slot] < self.blocks_needed(prompt_len):
+            self._alloc_block(slot)
+
+    def prepare_decode(self, slots: Sequence[int]) -> None:
+        """Allocate, for each active row, the block its next decode write
+        lands in (a no-op until the write crosses a block boundary)."""
+        for s in slots:
+            p = int(self.cache_pos[s])
+            logical = p % self.attn_len if self.cfg.attention_window > 0 \
+                else min(p, self.attn_len - 1)
+            while self._nalloc[s] <= logical // self.block_size:
+                self._alloc_block(s)
+
+    def release(self, slot: int) -> None:
+        n = int(self._nalloc[slot])
+        self._free_blocks.extend(int(b) for b in self.block_table[slot, :n])
+        self.block_table[slot, :] = 0
+        self._reserved[slot] = 0
+        self._nalloc[slot] = 0
+        super().release(slot)                  # asserts against double free
+
+    def permute_free(self, seed: int) -> None:
+        """Shuffle free-block allocation order.  Physical block placement
+        is invisible to results (tests/test_paged_kv.py proves it)."""
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(self._free_blocks))
+        self._free_blocks = [self._free_blocks[i] for i in order]
+
+    def check_invariants(self) -> None:
+        """Free-list integrity: no double-allocation, no leaks,
+        used + free == total after every operation."""
+        used_ids = [int(self.block_table[s, j])
+                    for s in range(self.num_slots)
+                    for j in range(int(self._nalloc[s]))]
+        free_ids = list(self._free_blocks)
+        assert len(set(used_ids)) == len(used_ids), "double-allocated block"
+        assert 0 not in used_ids, "trash block handed out"
+        assert not set(used_ids) & set(free_ids), \
+            "block simultaneously used and free"
+        assert len(used_ids) + len(free_ids) == self.num_blocks, \
+            f"leak: used {len(used_ids)} + free {len(free_ids)} != " \
+            f"{self.num_blocks}"
+        assert all(1 <= b <= self.num_blocks for b in used_ids + free_ids)
+        for s in range(self.num_slots):
+            n = int(self._nalloc[s])
+            assert (self.block_table[s, n:] == 0).all(), \
+                f"slot {s}: stale table entries past nalloc"
+            assert self._nalloc[s] <= self._reserved[s], \
+                f"slot {s}: allocated past its reservation"
+        assert self.available_blocks >= 0
+
+    # ------------------------------------------------------------- cache I/O
+    def write(self, slots: Sequence[int], piece: PyTree,
+              lengths: Sequence[int]) -> None:
+        """Install freshly prefilled caches into ``slots``.
+
+        ``piece`` is a contiguous (slotted-layout) cache tree with batch
+        ``>= len(slots)`` on axis 1 — exactly what ``model.prefill``
+        returns — whose first ``min(len, attn_len)`` columns are scattered
+        into each row's (freshly allocated) blocks; Mamba leaves install
+        per row.  ``lengths``: per-slot prompt length, i.e. the position
+        the first decode step will write.
+        """
+        slots = [int(s) for s in slots]
+        lengths = [int(n) for n in lengths]
+        for s, L in zip(slots, lengths):
+            self.alloc_prompt(s, L)
+
+        bs = self.block_size
+        n_cols = [min(L, self.attn_len) for L in lengths]
+        row_idx = np.asarray(slots, np.int32)
+
+        # one scatter per (n_cols group, leaf), vectorised across slots —
+        # a per-slot .at[].set chain would copy the whole pool array once
+        # per slot on the host
+        by_nc: Dict[int, List[int]] = {}
+        for j, nc in enumerate(n_cols):
+            by_nc.setdefault(nc, []).append(j)
+
+        def put_paged(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
+            for nc, js in by_nc.items():
+                cols = np.arange(nc)
+                blks = np.stack([self.block_table[slots[j], cols // bs]
+                                 for j in js])              # (nb, nc)
+                offs = np.broadcast_to(cols % bs, blks.shape)
+                pool = pool.at[:, blks, offs].set(
+                    pc[:, np.asarray(js), :nc].astype(pool.dtype))
+            return pool
+
+        def put_rows(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
+            return pool.at[:, row_idx].set(
+                pc[:, :len(slots)].astype(pool.dtype))
+
+        new_cache: Dict[str, PyTree] = {}
+        for pos_key, c in self.cache.items():
+            if "attn" in c:
+                new_cache[pos_key] = {"attn": jax.tree.map(
+                    put_paged, c["attn"], piece[pos_key]["attn"])}
+            else:
+                new_cache[pos_key] = {"ssm": jax.tree.map(
+                    put_rows, c["ssm"], piece[pos_key]["ssm"])}
+        self.cache = new_cache
+        self.cache_pos[row_idx] = np.asarray(lengths, np.int32)
+
+    # ------------------------------------------------------------ reporting
+    def block_bytes(self) -> int:
+        """Device bytes of ONE block across all attention leaves."""
+        total = 0
+        for c in self.cache.values():
+            if "attn" in c:
+                for leaf in jax.tree.leaves(c["attn"]):
+                    total += leaf.nbytes // leaf.shape[1]
+        return total
+
+    def peak_kv_bytes(self) -> int:
+        """High-watermark of device KV bytes actually holding live pages
+        (+ the per-row SSM state, which is always resident)."""
+        row_bytes = sum(
+            leaf.nbytes for c in self.cache.values() if "ssm" in c
+            for leaf in jax.tree.leaves(c["ssm"]))
+        return self.peak_blocks * self.block_bytes() + row_bytes

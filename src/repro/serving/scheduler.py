@@ -11,7 +11,7 @@ blocking requests of other tiers behind it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -78,7 +78,8 @@ class Scheduler:
         return len(self.queue)
 
     def admit(self, free_slots: Sequence[int],
-              slot_k: Sequence[Optional[int]]
+              slot_k: Sequence[Optional[int]],
+              can_admit: Optional[Callable[[Request, int], bool]] = None
               ) -> List[Tuple[Request, int]]:
         """Pack queued requests into ``free_slots``.
 
@@ -88,17 +89,48 @@ class Scheduler:
         request doesn't care); non-matching requests are skipped, not
         blocked on.  Returns (request, slot) assignments and removes the
         admitted requests from the queue.
+
+        ``can_admit``: optional resource predicate ``(request, slot) ->
+        bool`` (the paged engine's projected-block-need + tier-quota
+        check), consulted AFTER a slot match — a request the predicate
+        accepts is guaranteed admitted, so the predicate may account
+        resources as it accepts (rejected probes must be side-effect
+        free).  A rejection blocks the probed SLOT tier for the rest of
+        this admit round (head-of-line per tier): later requests —
+        including wildcard ``k=None`` ones — cannot take that tier's
+        slots and leapfrog an earlier request that is only waiting on
+        blocks, since a stream of small requests could otherwise starve
+        a big one forever; other tiers' admission proceeds untouched.
+        A wildcard request is probed against one slot of EACH distinct
+        unblocked tier (in free-list order) before it is deemed
+        blocked, so a single tier's quota saturation cannot idle slots
+        another tier could have given it.
         """
         free = list(free_slots)
         assigned: List[Tuple[Request, int]] = []
         remaining: List[Request] = []
+        blocked_tiers: set = set()
         for req in self.queue:
-            slot = next((s for s in free
-                         if req.k is None or slot_k[s] == req.k), None)
-            if slot is None:
+            candidates: List[int] = []
+            seen_tiers: set = set()
+            for s in free:
+                t = slot_k[s]
+                if t in blocked_tiers or t in seen_tiers:
+                    continue
+                if req.k is None or t == req.k:
+                    seen_tiers.add(t)
+                    candidates.append(s)
+                    if req.k is not None:
+                        break
+            placed = False
+            for slot in candidates:
+                if can_admit is None or can_admit(req, slot):
+                    free.remove(slot)
+                    assigned.append((req, slot))
+                    placed = True
+                    break
+                blocked_tiers.add(slot_k[slot])
+            if not placed:
                 remaining.append(req)
-                continue
-            free.remove(slot)
-            assigned.append((req, slot))
         self.queue = remaining
         return assigned

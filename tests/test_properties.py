@@ -16,7 +16,15 @@ from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import Corpus, DataConfig, make_corpus
 from repro.models.moe_layer import _capacity, topk_routing
 
-settings.register_profile("ci", max_examples=25, deadline=None)
+# deterministic CI profile: derandomize fixes the example sequence (no
+# flaky shrink-dependent failures, no run-to-run drift) and the bounded
+# example count keeps the tier-1 run fast.  requirements-ci.txt installs
+# hypothesis, so this suite RUNS in CI — the importorskip only fires in
+# stripped local containers.  tests/test_paged_kv.py carries the same
+# settings for its pool-invariant interleavings (with a seeded fallback
+# sweep that runs even without hypothesis).
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          derandomize=True)
 settings.load_profile("ci")
 
 

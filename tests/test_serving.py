@@ -23,15 +23,18 @@ PROMPTS = RNG.integers(0, CFG.vocab_size, (4, 8)).astype(np.int32)
 
 def naive_decode(cfg, params, prompts, new_tokens, k, *, trainable=None):
     """The examples/adaptive_serving.py-style full-batch greedy loop —
-    the reference oracle the engine must reproduce token for token."""
+    the reference oracle the engine must reproduce token for token.
+    Runs loss-free MoE dispatch (``no_drop``), the serving contract: a
+    request's tokens must not depend on which rows share its batch."""
     L = prompts.shape[1]
     logits, cache = M.prefill(cfg, params, jnp.asarray(prompts), k=k,
-                              trainable=trainable, cache_len=L + new_tokens)
+                              trainable=trainable, cache_len=L + new_tokens,
+                              no_drop=True)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [tok]
     for i in range(new_tokens - 1):
         logits, cache = M.decode_step(cfg, params, cache, tok, L + i, k=k,
-                                      trainable=trainable)
+                                      trainable=trainable, no_drop=True)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(tok)
     return np.asarray(jnp.concatenate(out, axis=1))
@@ -205,6 +208,128 @@ def test_slot_pool_allocate_release_write():
         pool.release(0)                    # double free
 
 
+def test_scheduler_can_admit_blocks_own_tier_only():
+    """A request rejected by the resource predicate (no blocks for its
+    projected need) head-of-line-blocks ITS tier only: later same-tier
+    requests cannot leapfrog it, other tiers admit normally."""
+    sched = Scheduler()
+    mk = lambda rid, k, big: Request(
+        rid=rid, prompt=np.zeros(16 if big else 2, np.int32),
+        max_new_tokens=1, k=k)
+    # rid0: big premium (rejected); rid1 small premium (must NOT leapfrog);
+    # rid2 small economy (different tier, must admit)
+    for req in (mk(0, 2, True), mk(1, 2, False), mk(2, 1, False)):
+        sched.add(req)
+    out = sched.admit([0, 1, 2, 3], (2, 2, 1, 1),
+                      can_admit=lambda r, s: r.prompt_len < 10)
+    assert [(r.rid, s) for r, s in out] == [(2, 2)]
+    assert [r.rid for r in sched.queue] == [0, 1]
+    # blocks freed up: FIFO order resumes, big premium goes first
+    out = sched.admit([0, 1, 3], (2, 2, 1, 1), can_admit=lambda r, s: True)
+    assert [(r.rid, s) for r, s in out] == [(0, 0), (1, 1)]
+
+
+def test_scheduler_wildcards_respect_blocked_tiers():
+    """k=None (take-any-slot) requests must not punch through the
+    head-of-line barrier: they cannot take a blocked tier's slots, and a
+    blocked wildcard — which could have sat anywhere — ends the round."""
+    mk = lambda rid, k, big=False: Request(
+        rid=rid, prompt=np.zeros(16 if big else 2, np.int32),
+        max_new_tokens=1, k=k)
+    sched = Scheduler()
+    # rid0: big premium, rejected -> tier 2 blocked; rid1: wildcard must
+    # NOT grab the freed tier-2 slot (it would book rid0's blocks), but
+    # may take a tier-1 slot
+    for req in (mk(0, 2, big=True), mk(1, None)):
+        sched.add(req)
+    out = sched.admit([0, 1, 2], (2, 2, 1),
+                      can_admit=lambda r, s: r.prompt_len < 10)
+    assert [(r.rid, s) for r, s in out] == [(1, 2)]
+    assert [r.rid for r in sched.queue] == [0]
+
+    # a blocked wildcard ends the round: nothing may leapfrog a request
+    # that could have occupied any slot
+    sched = Scheduler()
+    for req in (mk(0, None, big=True), mk(1, 1), mk(2, 2)):
+        sched.add(req)
+    out = sched.admit([0, 1], (2, 1), can_admit=lambda r, s: r.prompt_len < 10)
+    assert out == []
+    assert [r.rid for r in sched.queue] == [0, 1, 2]
+
+
+def test_premium_flood_cannot_starve_economy_admission():
+    """Adversarial trace: a flood of long premium requests saturates the
+    block pool before short economy requests arrive.  Economy admission
+    must proceed as soon as its tier slots + blocks allow — overlapping
+    the flood, not serialised after it — and every request completes."""
+    prem = [Request(rid=i, prompt=PROMPTS[i % 4], max_new_tokens=6, k=2)
+            for i in range(8)]
+    econ = [Request(rid=100 + i, prompt=PROMPTS[i % 4][:4],
+                    max_new_tokens=2, k=1) for i in range(6)]
+    eng = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                        slot_k=(2, 2, 1, 1), kv_layout="paged",
+                        block_size=4, num_blocks=12)
+    rep = eng.run(prem + econ)
+    assert len(rep.completions) == 14
+    last_prem_done = max(c.finished for c in rep.completions if c.rid < 100)
+    econ_admitted = [c.admitted for c in rep.completions if c.rid >= 100]
+    assert max(econ_admitted) < last_prem_done, \
+        "economy requests were starved until the premium flood drained"
+    # and the results match an unconstrained slotted run exactly
+    ref = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                        slot_k=(2, 2, 1, 1),
+                        kv_layout="slotted").run(prem + econ)
+    want = ref.tokens_by_rid()
+    for rid, toks in rep.tokens_by_rid().items():
+        np.testing.assert_array_equal(toks, want[rid])
+
+
+def test_big_request_not_starved_by_economy_stream():
+    """The dual of the premium-flood test: a block-hungry premium request
+    queued behind a stream of small economy requests must not wait until
+    the whole stream drains — freed blocks are escrowed for the oldest
+    waiter, so it admits ahead of younger economy arrivals."""
+    econ = [Request(rid=i, prompt=PROMPTS[i % 4][:4], max_new_tokens=4,
+                    k=1) for i in range(6)]
+    big = Request(rid=50, prompt=np.concatenate([PROMPTS[0], PROMPTS[1]]),
+                  max_new_tokens=8, k=2)        # 16 + 8 - 1 => 6 blocks
+    reqs = econ[:2] + [big] + econ[2:]          # big is 3rd in FIFO order
+    eng = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=24,
+                        slot_k=(2, 1, 1, 1), kv_layout="paged",
+                        block_size=4, num_blocks=8)
+    rep = eng.run(reqs)
+    assert len(rep.completions) == 7
+    by_rid = {c.rid: c for c in rep.completions}
+    # without escrow the economy stream re-books every freed block and
+    # the big request admits dead last
+    assert all(by_rid[50].admitted < by_rid[e.rid].admitted
+               for e in econ[2:]), \
+        "big premium request was starved behind younger economy requests"
+    eng.pool.check_invariants()
+
+
+def test_all_long_trace_drains_through_minimal_block_pool():
+    """All-long-request trace through a pool holding ~one request's blocks
+    at a time: requests serialise on block availability without deadlock
+    or starvation, and tokens still match the unconstrained engine."""
+    reqs = [Request(rid=i, prompt=PROMPTS[i % 4], max_new_tokens=6, k=2)
+            for i in range(5)]
+    # 8 + 6 - 1 = 13 positions => 4 blocks of 4; 5 usable blocks => one
+    # request in flight (plus a head start on the next one's prompt)
+    eng = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                        slot_k=(2,) * 4, kv_layout="paged",
+                        block_size=4, num_blocks=5)
+    rep = eng.run(reqs)
+    assert len(rep.completions) == 5
+    ref = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                        slot_k=(2,) * 4, kv_layout="slotted").run(reqs)
+    want = ref.tokens_by_rid()
+    for rid, toks in rep.tokens_by_rid().items():
+        np.testing.assert_array_equal(toks, want[rid])
+    assert eng.pool.blocks_in_use == 0
+    eng.pool.check_invariants()
+
+
 def test_scheduler_fifo_per_tier():
     sched = Scheduler()
     mk = lambda rid, k: Request(rid=rid, prompt=np.zeros(4, np.int32),
@@ -254,6 +379,18 @@ def test_engine_rejects_unservable_tier():
     eng = ServingEngine(CFG, PARAMS, num_slots=1, slot_len=16, slot_k=(2,))
     with pytest.raises(RuntimeError, match="match no slot tier"):
         eng.run([Request(rid=0, prompt=PROMPTS[0], max_new_tokens=2, k=1)])
+
+
+def test_engine_serves_zero_max_new_on_both_layouts():
+    """max_new_tokens=0 still emits the prefill token; the paged block
+    projection must floor at the prompt length (prefill installs all L
+    positions) or reservation runs out mid-install."""
+    for layout in ("paged", "slotted"):
+        eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                            slot_k=(2, 2), kv_layout=layout, block_size=4)
+        [comp] = eng.run([Request(rid=0, prompt=PROMPTS[0, :5],
+                                  max_new_tokens=0)]).completions
+        assert comp.n_generated == 1 and not comp.truncated
 
 
 def test_engine_truncates_at_slot_capacity():
