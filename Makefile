@@ -4,11 +4,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow bench bench-round bench-serve bench-smoke docs-check changes-check ci
+.PHONY: test test-slow coverage bench bench-round bench-serve bench-smoke docs-check changes-check ci
 
-# tier-1 verification (see ROADMAP.md); pytest.ini excludes -m slow here
+# tier-1 verification (see ROADMAP.md); pytest.ini excludes -m slow here;
+# --durations surfaces the slowest tests so slow-test creep stays visible
 test:
-	$(PYTHON) -m pytest -q
+	$(PYTHON) -m pytest -q --durations=15
+
+# tier-1 under coverage + the kernels/serving line-coverage floor
+# (mirrors the CI coverage job; needs pytest-cov from requirements-ci.txt)
+coverage:
+	$(PYTHON) -m pytest -q --cov=repro --cov-report=xml --cov-report=term
+	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 repro/kernels repro/serving
 
 # the long-running randomized stress subset (CI runs it in the smoke job)
 test-slow:
@@ -41,9 +48,10 @@ changes-check:
 
 # local mirror of .github/workflows/ci.yml (keep the two in sync):
 # tier-1 tests, slow subset, docs-check, benchmark smoke + artifact,
-# CHANGES.md check
+# CHANGES.md check.  The CI coverage job is mirrored separately by
+# `make coverage` (needs pytest-cov, which requirements-ci.txt installs)
 ci: changes-check
-	$(PYTHON) -m pytest -x -q
+	$(PYTHON) -m pytest -x -q --durations=15
 	$(MAKE) test-slow
 	$(MAKE) docs-check
 	$(MAKE) bench-smoke

@@ -7,13 +7,17 @@ experts top-4) with greedy decode on this host's devices:
      through the engine's slotted decode beats the sequential
      per-request prefill+decode loop (the pre-engine launch/serve.py
      path) in requests/sec.
-  2. **Per-slot k is cheaper**: on the same 8-slot mixed batch, slots
-     decoding at k=1 shrink the MoE dispatch capacity (it follows
-     sum(slot_k)), so the compiled step is measurably faster than the
-     all-full-k step.  (Measured in capacity-limited dispatch mode,
-     ``no_drop=False`` — the engine's loss-free default pins capacity to
-     the token count, deliberately trading this effect for
-     schedule-independent results.)
+  2. **Per-slot k is cheaper**: on the same mixed batch, slots decoding
+     at k=1 shrink the MoE dispatch capacity (it follows sum(slot_k)),
+     so the compiled step is measurably faster than the all-full-k step
+     (measured in capacity-limited dispatch mode,
+     ``dispatch="capacity"``).
+  2b. **Ragged dispatch keeps that win loss-free**: the engine's default
+     sort-based dispatch (``dispatch="ragged"``) decodes k=1 pools
+     measurably faster than full-k at equal batch — its expert buffer
+     holds ~sum(slot_k) rows — while the dense no-drop mode
+     (``dispatch="dense"``, loss-free via worst-case padding) is flat in
+     slot_k.
   3. **Paging packs more requests into the same KV bytes**: on a mixed
      short-economy/long-premium workload, the block-paged pool serves
      2x the concurrent rows of the slotted pool from a matched device
@@ -108,10 +112,10 @@ def run(smoke: bool = False) -> None:
     # ---- 1. continuous batching vs the sequential per-request loop ----
     reqs = _requests(cfg, n_req, prompt_len, new_tokens, k=top_k)
     seq_wall = _sequential_wall(cfg, params, reqs, slot_len)
-    # no_drop=False: the sequential baseline runs capacity-limited
+    # dispatch="capacity": the sequential baseline runs capacity-limited
     # dispatch, so the engine must too for a like-for-like comparison
     report = _engine_report(cfg, params, reqs, num_slots=num_slots,
-                            slot_len=slot_len, no_drop=False)
+                            slot_len=slot_len, dispatch="capacity")
     s = report.summary()
     rows = [
         {"mode": "sequential", "slots": 1, "requests": n_req,
@@ -142,18 +146,22 @@ def run(smoke: bool = False) -> None:
                ("mixed", (top_k,) * (k_slots // 2)
                 + (1,) * (k_slots - k_slots // 2)),
                ("k1", (1,) * k_slots)]
-    k_rows = []
-    step_ms = {}
-    for name, slot_k in configs:
+
+    def _k_step_ms(slot_k, dispatch):
+        """Steady-state decode-step time at this slot_k mix: min over the
+        run's steps (the median absorbs host-side scheduling noise)."""
         kreqs = [Request(rid=i, prompt=reqs[i % n_req].prompt,
                          max_new_tokens=new_tokens, k=slot_k[i])
                  for i in range(k_slots)]
         rep = _engine_report(cfg, params, kreqs, num_slots=k_slots,
                              slot_len=slot_len, slot_k=slot_k,
-                             no_drop=False)
-        # steady-state step: min over the run's steps (the median absorbs
-        # host-side scheduling noise between steps)
-        ms = float(np.min(rep.decode_step_s)) * 1e3
+                             dispatch=dispatch)
+        return float(np.min(rep.decode_step_s)) * 1e3, rep
+
+    k_rows = []
+    step_ms = {}
+    for name, slot_k in configs:
+        ms, rep = _k_step_ms(slot_k, "capacity")
         step_ms[name] = ms
         k_rows.append({"slot_k": name, "slots": k_slots,
                        "sum_k": sum(slot_k),
@@ -167,7 +175,47 @@ def run(smoke: bool = False) -> None:
     k_speed = step_ms["full_k"] / max(step_ms["k1"], 1e-9)
     print(f"# CLAIM serving: k=1 slots cut the decode step to "
           f"{step_ms['k1']:.2f} ms vs {step_ms['full_k']:.2f} ms at full k "
-          f"({k_speed:.2f}x) on the same {k_slots}-slot batch")
+          f"({k_speed:.2f}x) on the same {k_slots}-slot batch "
+          f"(capacity-limited dispatch)")
+
+    # ---- 2b. ragged dispatch: loss-free AND sum(slot_k)-proportional ----
+    # The engine's DEFAULT loss-free mode (docs/kernels.md §MoE dispatch
+    # modes): the ragged expert buffer holds ~sum(slot_k) rows, so the
+    # decode step must get cheaper as budgets shrink — where the dense
+    # no-drop mode (loss-free via worst-case padding, the pre-ragged
+    # default) dispatches E·num_slots expert rows whatever the budget and
+    # stays flat.
+    from repro.kernels.ragged_dispatch import BLOCK_M, ragged_rows
+    from repro.models.moe_layer import dense_capacity
+    dense_rows = E * dense_capacity(k_slots)
+    r_rows = []
+    r_step = {}
+    for mode in ("ragged", "dense"):
+        # two points suffice to show dense is flat; ragged gets the sweep
+        sweep = configs if mode == "ragged" else [configs[0], configs[-1]]
+        for name, slot_k in sweep:
+            ms, rep = _k_step_ms(slot_k, mode)
+            r_step[(mode, name)] = ms
+            r_rows.append({
+                "dispatch": mode, "slot_k": name, "slots": k_slots,
+                "sum_k": sum(slot_k),
+                "expert_rows": (ragged_rows(sum(slot_k), E, BLOCK_M)
+                                if mode == "ragged" else dense_rows),
+                "decode_step_ms": ms,
+                "gen_tok_per_s": rep.summary()["gen_tokens_per_s"]})
+    emit("serving_ragged", r_rows,
+         ["dispatch", "slot_k", "slots", "sum_k", "expert_rows",
+          "decode_step_ms", "gen_tok_per_s"])
+    rag_speed = (r_step[("ragged", "full_k")]
+                 / max(r_step[("ragged", "k1")], 1e-9))
+    dense_ratio = (r_step[("dense", "full_k")]
+                   / max(r_step[("dense", "k1")], 1e-9))
+    print(f"# CLAIM serving: ragged dispatch keeps loss-free decode "
+          f"sum(slot_k)-proportional — k=1 steps at "
+          f"{r_step[('ragged', 'k1')]:.2f} ms vs "
+          f"{r_step[('ragged', 'full_k')]:.2f} ms at full k "
+          f"({rag_speed:.2f}x) on the same {k_slots}-slot batch, while "
+          f"dense no-drop stays flat ({dense_ratio:.2f}x)")
 
     # ---- 3. paged vs slotted on a mixed-length tiered workload ----
     # Short economy requests (8 prompt + 24 new => 2 blocks of 16) and
@@ -267,6 +315,9 @@ def run(smoke: bool = False) -> None:
          "batching_speedup": speedup,
          "decode_step_ms": step_ms,
          "adaptive_k_step_speedup": k_speed,
+         "ragged_step_ms": {f"{m}/{n}": v for (m, n), v in r_step.items()},
+         "ragged_k_step_speedup": rag_speed,
+         "dense_nodrop_step_ratio": dense_ratio,
          "paged_mixed": mix_stats,
          "paged_mixed_speedup": paged_speed}))
 

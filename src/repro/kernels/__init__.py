@@ -4,4 +4,4 @@
 # Model code selects an implementation through `repro.kernels.backend`
 # (driven by `ModelConfig.kernels`); `ops.py` remains the thin manual
 # use_kernel=True/False dispatch for scripts and benchmarks.
-from . import backend, ops, ref  # noqa: F401
+from . import backend, ops, ragged_dispatch, ref  # noqa: F401

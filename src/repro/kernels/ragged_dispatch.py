@@ -1,0 +1,272 @@
+"""Sort-based ragged MoE dispatch: loss-free AND sum(k)-proportional.
+
+The GShard one-hot dispatch (models/moe_layer.py) buys static shapes with a
+per-expert capacity ``C``: every expert's token queue is padded to ``C``
+and tokens past it are DROPPED.  The serving engine's loss-free mode pins
+``C`` to the whole token count, so nothing ever drops — but then every
+expert pays worst-case padding and the FLOPs-adaptivity of a small expert
+budget k (FLAME's whole point) is gone.
+
+This module is the third way: a **counting-sort** dispatch (the
+static-shape form of argsort-by-expert + segment offsets).  Assignments
+are laid out expert-major in one ragged buffer of ``N`` rows:
+
+  =========  ============================================================
+  segment    expert ``e`` owns rows ``[off[e], off[e] + count[e])``,
+             its segment padded up to a multiple of ``block_m`` so
+             matmul tiles never straddle two experts;
+  src        ``src[i]``: which token sits in buffer row ``i``
+             (tokens ascending within each expert — a stable sort by
+             expert key, computed with cumsums instead of a sort);
+  blocks     ``block_expert[i]``: which expert's weights row-block ``i``
+             multiplies (the segment-offset lookup, precomputed);
+  inverse    ``rows[t, j]``: the buffer row holding token ``t``'s rank-j
+             assignment, with combine weight ``wrank[t, j]`` — the
+             combine is a per-token gather, no scatter races.
+  =========  ============================================================
+
+``N`` is **static**: the worst-case assignment count (``T * k``, or
+``S * sum(slot_k)`` for per-slot budgets) plus one block of padding per
+expert — so expert compute is proportional to the *activated budget*, not
+``num_tokens × num_experts``.  Every token the router selects is routed —
+no capacity limit, no dropping — and each token's output depends only on
+its own row: co-batched rows provably cannot change results, which is why
+the serving engine runs this mode by default (docs/kernels.md).
+
+Three Pallas kernels implement the hot path (one grid program per
+``block_m`` row block; scalar-prefetched plan arrays drive the dynamic
+addressing), each with a pure-jnp oracle in :mod:`repro.kernels.ref` and a
+``custom_vjp`` (kernel forward, reference backward) in
+:mod:`repro.kernels.backend`:
+
+* :func:`ragged_gather`   — ``xs[i] = x[src[i]] * valid[i]``;
+* :func:`ragged_expert_matmul` — grouped (segment) LoRA matmul: row block
+  ``i`` multiplies ``w[block_expert[i]]`` (+ the LoRA bypass);
+* :func:`ragged_combine`  — ``out[t] = sum_j wrank[t,j] * eo[rows[t,j]]``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Row-block size of the ragged buffer: every expert segment is padded to a
+# multiple of this, so grouped-matmul tiles never straddle experts.  8 is
+# the fp32 sublane minimum — the smallest padding that still tiles.
+BLOCK_M = 8
+
+
+def ragged_rows(budget: int, num_experts: int,
+                block_m: int = BLOCK_M) -> int:
+    """Static ragged-buffer size for a worst-case assignment ``budget``:
+    the budget rounded up to blocks, plus one block of segment padding per
+    expert (each expert's count rounds up independently)."""
+    return -(-budget // block_m) * block_m + num_experts * block_m
+
+
+class RaggedPlan(NamedTuple):
+    """Integer dispatch plan (plus the differentiable combine weights).
+
+    Built once per MoE layer call from the router outputs; consumed by the
+    three backend ops.  All layout arrays are int32 and carry no gradient;
+    ``wrank`` is the per-rank combine weight and is differentiable back to
+    the router weights."""
+
+    src: jnp.ndarray           # (N,)  token id per buffer row
+    valid: jnp.ndarray         # (N,)  0/1 — padding rows are 0
+    block_expert: jnp.ndarray  # (N // block_m,) expert id per row block
+    rows: jnp.ndarray          # (T, max_k) buffer row per (token, rank)
+    wrank: jnp.ndarray         # (T, max_k) combine weight per rank (f32)
+
+
+def ragged_plan(mask: jnp.ndarray, weights: jnp.ndarray, *, budget: int,
+                max_k: int, block_m: int = BLOCK_M) -> RaggedPlan:
+    """Counting-sort dispatch plan from router outputs.
+
+    ``mask``/``weights``: (T, E) selection one-hots and renormalised
+    combine weights (``ref.topk_router_ref`` layout); ``budget``: static
+    worst-case total assignments (>= ``mask.sum()`` always); ``max_k``:
+    static per-token selection cap (``rows``' second dim).
+
+    The forward plan scatters each selected (token, expert) pair to its
+    segment slot ``off[e] + rank_of_t_within_e``; the inverse plan reads
+    the same expression at each token's top-``max_k`` experts.  Ranks past
+    a token's own budget have ``wrank == 0`` and point at row 0 — they
+    gather a live row times zero, never influencing anything.
+    """
+    T, E = mask.shape
+    N = ragged_rows(budget, E, block_m)
+    nb = N // block_m
+    m = mask.astype(jnp.float32)
+    counts = m.sum(axis=0).astype(jnp.int32)                       # (E,)
+    padded = -(-counts // block_m) * block_m
+    ends = jnp.cumsum(padded)
+    off = ends - padded                                            # exclusive
+    # rank of token t within expert e's segment (valid where selected)
+    pos = (jnp.cumsum(m, axis=0) - 1.0).astype(jnp.int32)          # (T, E)
+    slot = off[None, :] + pos
+    dst = jnp.where(m > 0, slot, N)                # unselected -> dropped
+    tok = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, E))
+    src = jnp.zeros((N,), jnp.int32).at[dst].set(tok, mode="drop")
+    valid = jnp.zeros((N,), jnp.int32).at[dst].set(1, mode="drop")
+    starts = jnp.arange(nb, dtype=jnp.int32) * block_m
+    block_expert = jnp.minimum(
+        (ends[None, :] <= starts[:, None]).sum(axis=1), E - 1
+    ).astype(jnp.int32)
+    # inverse plan: a token's selected experts are exactly its nonzero
+    # combine weights, in descending-weight order (the router's own rank
+    # order — selection is nested, so rank order never matters for the sum)
+    top_w, top_idx = jax.lax.top_k(weights, max_k)
+    rank_valid = (top_w > 0).astype(weights.dtype)
+    rows = jnp.take_along_axis(slot, top_idx, axis=1)
+    rows = jnp.where(rank_valid > 0, rows, 0).astype(jnp.int32)
+    wrank = top_w * rank_valid
+    return RaggedPlan(src=src, valid=valid, block_expert=block_expert,
+                      rows=rows, wrank=wrank)
+
+
+# ==========================================================================
+# Pallas kernels
+# ==========================================================================
+
+def _gather_kernel(src_ref, val_ref, x_ref, o_ref, *, block_m: int):
+    i = pl.program_id(0)
+    for r in range(block_m):                       # static unroll
+        row = src_ref[i * block_m + r]
+        v = val_ref[i * block_m + r]
+        xr = pl.load(x_ref, (pl.ds(row, 1), slice(None)))
+        o_ref[r, :] = (xr * v.astype(xr.dtype))[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ragged_gather(x: jnp.ndarray, src: jnp.ndarray, valid: jnp.ndarray, *,
+                  block_m: int = BLOCK_M, interpret: bool = True):
+    """x: (T, D); src, valid: (N,) int32 -> xs (N, D) with
+    ``xs[i] = x[src[i]] * valid[i]`` (padding rows zero)."""
+    T, D = x.shape
+    N = src.shape[0]
+    assert N % block_m == 0, (N, block_m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N // block_m,),
+        in_specs=[pl.BlockSpec((T, D), lambda i, s, v: (0, 0))],
+        out_specs=pl.BlockSpec((block_m, D), lambda i, s, v: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block_m=block_m),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        interpret=interpret,
+    )(src, valid, x)
+
+
+def _matmul_kernel(be_ref, x_ref, w_ref, o_ref, *, scale: float):
+    del be_ref, scale
+    xf = x_ref[...].astype(jnp.float32)
+    y = jnp.dot(xf, w_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _matmul_lora_kernel(be_ref, x_ref, w_ref, a_ref, b_ref, o_ref, *,
+                        scale: float):
+    del be_ref
+    xf = x_ref[...].astype(jnp.float32)
+    y = jnp.dot(xf, w_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    xa = jnp.dot(xf, a_ref[0].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    y = y + jnp.dot(xa, b_ref[0].astype(jnp.float32),
+                    preferred_element_type=jnp.float32) * scale
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def ragged_expert_matmul(xs: jnp.ndarray, block_expert: jnp.ndarray,
+                         w: jnp.ndarray, a: Optional[jnp.ndarray] = None,
+                         b: Optional[jnp.ndarray] = None, *,
+                         scale: float = 0.0, interpret: bool = True):
+    """Grouped (segment) matmul over the ragged buffer.
+
+    xs: (N, K); block_expert: (N // bm,) int32; w: (E, K, H);
+    a/b: optional per-expert LoRA factors (E, K, r) / (E, r, H).
+    Row block ``i`` computes ``xs_i @ w[be[i]]`` (+ LoRA bypass) — the
+    expert index comes in through the scalar-prefetched block spec, the
+    MegaBlocks-style grouped GEMM.  fp32 accumulate, one cast at the end
+    (the suite-wide numerics contract)."""
+    N, K = xs.shape
+    nb = block_expert.shape[0]
+    assert N % nb == 0, (N, nb)
+    bm = N // nb
+    H = w.shape[-1]
+    in_specs = [
+        pl.BlockSpec((bm, K), lambda i, be: (i, 0)),
+        pl.BlockSpec((1, K, H), lambda i, be: (be[i], 0, 0)),
+    ]
+    if a is None:
+        kernel = functools.partial(_matmul_kernel, scale=scale)
+        args = (block_expert, xs, w)
+    else:
+        r = a.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, K, r), lambda i, be: (be[i], 0, 0)),
+            pl.BlockSpec((1, r, H), lambda i, be: (be[i], 0, 0)),
+        ]
+        kernel = functools.partial(_matmul_lora_kernel, scale=scale)
+        args = (block_expert, xs, w, a, b)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, H), lambda i, be: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, H), xs.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def _combine_kernel(rows_ref, w_ref, eo_ref, o_ref, *, block_t: int,
+                    max_k: int):
+    i = pl.program_id(0)
+    wblk = w_ref[...]                              # (bt, max_k)
+    for r in range(block_t):
+        acc = jnp.zeros((1, o_ref.shape[-1]), jnp.float32)
+        for j in range(max_k):
+            row = rows_ref[(i * block_t + r) * max_k + j]
+            er = pl.load(eo_ref, (pl.ds(row, 1), slice(None)))
+            acc = acc + er.astype(jnp.float32) * wblk[r, j]
+        o_ref[r, :] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def ragged_combine(eo: jnp.ndarray, rows: jnp.ndarray, wrank: jnp.ndarray,
+                   *, block_t: int = BLOCK_M, interpret: bool = True):
+    """eo: (N, D); rows: (T, max_k) int32; wrank: (T, max_k) ->
+    out (T, D) with ``out[t] = sum_j wrank[t, j] * eo[rows[t, j]]``.
+    A pure gather per token — no scatter, no cross-token accumulation."""
+    T, max_k = rows.shape
+    D = eo.shape[-1]
+    bt = min(block_t, T)
+    while T % bt:
+        bt -= 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, max_k), lambda i, r: (i, 0)),
+            pl.BlockSpec(eo.shape, lambda i, r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda i, r: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, block_t=bt, max_k=max_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, D), eo.dtype),
+        interpret=interpret,
+    )(rows.reshape(-1), wrank, eo)

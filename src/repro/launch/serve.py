@@ -80,6 +80,13 @@ def main() -> None:
                     help="usable KV blocks in the pool; default sizes the "
                          "pool so every slot can hold a max-length request "
                          "— set lower to make blocks the scarce resource")
+    ap.add_argument("--dispatch", choices=("ragged", "dense", "capacity"),
+                    default="ragged",
+                    help="MoE token dispatch: ragged = sort-based, "
+                         "loss-free AND sum(slot_k)-proportional (default); "
+                         "dense = loss-free one-hot at worst-case padding; "
+                         "capacity = GShard capacity-limited throughput "
+                         "mode (batching may change results)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=float("inf"),
                     help="Poisson arrival rate (req/s); inf = closed batch")
@@ -120,6 +127,11 @@ def main() -> None:
                              "--k N is shorthand for --mix N:1.0")
         args.mix = f"{args.k}:1.0"       # uniform reduced-k pool
     mix = parse_mix(args.mix, top_k) if top_k else ()
+    bad = [k for k, _ in mix if not 1 <= k <= cfg.moe.num_experts]
+    if bad:
+        raise SystemExit(
+            f"--mix tiers {bad} out of range: {cfg.name} (the --local "
+            f"reduced config) has {cfg.moe.num_experts} experts")
     slot_k = slot_k_for_mix(mix, args.slots) if mix else None
 
     # prompts must leave room for at least one generated token in a slot
@@ -135,12 +147,14 @@ def main() -> None:
                            slot_len=args.slot_len, slot_k=slot_k,
                            kv_layout=args.kv_layout,
                            block_size=args.block_size,
-                           num_blocks=args.num_blocks)
+                           num_blocks=args.num_blocks,
+                           dispatch=args.dispatch)
     pool_desc = (f"{engine.pool.num_blocks} x {engine.pool.block_size}"
                  f"-token KV blocks" if engine.paged
                  else "slotted KV pool")
     print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens "
-          f"({pool_desc}), slot_k={engine.slot_k}")
+          f"({pool_desc}), slot_k={engine.slot_k}, "
+          f"dispatch={engine.dispatch}")
     report = engine.run(make_trace(wl))
     for key, val in report.summary().items():
         print(f"  {key}: {val:.2f}" if isinstance(val, float)

@@ -127,7 +127,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
                  cache=None, cache_pos=None, return_cache=False,
                  deterministic=True, num_groups=1, inner_act_fn=None,
                  outer_act_fn=None, moe_shard_fns=None, slot_mask=None,
-                 block_table=None, page_span=None, no_drop=False):
+                 block_table=None, page_span=None, dispatch=None):
     def _reshard(t):
         # force the residual add's output back to the between-block
         # sharding so GSPMD lowers the partial-sum as a reduce-scatter
@@ -169,7 +169,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
             p["moe"], cfg, h2, k=k, rescaler=rescaler,
             lora=lg.get("moe"), lora_scale=lora_scale,
             deterministic=deterministic, num_groups=num_groups,
-            shard_fns=moe_shard_fns, slot_mask=slot_mask, no_drop=no_drop)
+            shard_fns=moe_shard_fns, slot_mask=slot_mask, dispatch=dispatch)
         x = _reshard(x + h2)
     elif cfg.d_ff > 0:
         h2 = rms_norm(p["ffn_norm"], x, cfg.rms_eps)
@@ -190,7 +190,7 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 remat=False, remat_chunk=0, deterministic=True,
                 num_groups=1, act_fn=None, inner_act_fn=None,
                 moe_shard_fns=None, slot_mask=None, block_table=None,
-                page_span=None, no_drop=False):
+                page_span=None, dispatch=None):
     P = cfg.pattern_period
     trainable = trainable or {}
     lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
@@ -236,7 +236,7 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 outer_act_fn=act_fn if inner_act_fn is not None else None,
                 moe_shard_fns=moe_shard_fns, slot_mask=slot_mask,
                 block_table=block_table, page_span=page_span,
-                no_drop=no_drop)
+                dispatch=dispatch)
             if aux is not None:
                 counts[key] = aux.activation_counts
             if nc is not None:
@@ -451,7 +451,7 @@ def init_paged_cache(cfg, num_slots: int, num_blocks: int,
 
 def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                 num_groups=1, slot_mask=None, block_table=None,
-                page_span=None, no_drop=False):
+                page_span=None, no_drop=False, dispatch=None):
     """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int, or a
     (B,) vector of per-row positions — the serving engine's slotted decode,
     where every cache slot sits at a different depth (serving/engine.py).
@@ -466,7 +466,13 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
     int) is each row's logical capacity in tokens: the ring modulus for
     sliding-window models and the mask cap for the gathered pages
     (serving/kv_cache.BlockPool).
+
+    ``dispatch``/``no_drop`` select the MoE token-dispatch mode
+    (:func:`repro.models.moe_layer.apply_moe`): ``dispatch`` is one of
+    ``"capacity"``/``"dense"``/``"ragged"``; ``no_drop=True`` is the
+    legacy spelling of ``dispatch="dense"``.
     Returns (logits (B,1,V[,K]), new_cache)."""
+    dispatch = moe_mod.resolve_dispatch(dispatch, no_drop)
     x = embed_tokens(params, cfg, tokens)
     B = x.shape[0]
     pos = jnp.asarray(pos)
@@ -475,13 +481,14 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                         cache=cache, cache_pos=pos, return_cache=True,
                         num_groups=num_groups, slot_mask=slot_mask,
                         block_table=block_table, page_span=page_span,
-                        no_drop=no_drop)
+                        dispatch=dispatch)
     h = rms_norm(params["final_norm"], h, cfg.rms_eps)
     return lm_head(params, cfg, h), ys["cache"]
 
 
 def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
-            act_fn=None, cache_len=None, slot_mask=None, no_drop=False):
+            act_fn=None, cache_len=None, slot_mask=None, no_drop=False,
+            dispatch=None):
     """Forward pass that also builds the decode cache.
     Returns (logits_last (B,1,V[,K]), cache).
 
@@ -492,13 +499,18 @@ def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
 
     ``slot_mask``: optional dynamic (B,) 0/1 row mask — rows at 0 are
     excluded from MoE routing (the serving engine's prefill batch-bucket
-    padding rows, which must not consume expert capacity)."""
+    padding rows, which must not consume expert capacity).
+
+    ``dispatch``/``no_drop``: MoE token-dispatch mode, as in
+    :func:`decode_step`."""
+    dispatch = moe_mod.resolve_dispatch(dispatch, no_drop)
     B, S = tokens.shape[:2]
     positions = jnp.arange(S)
     x = embed_tokens(params, cfg, tokens)
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable,
                         k=k, return_cache=True, num_groups=num_groups,
-                        act_fn=act_fn, slot_mask=slot_mask, no_drop=no_drop)
+                        act_fn=act_fn, slot_mask=slot_mask,
+                        dispatch=dispatch)
     cache = ys["cache"]
     target = cache_len_for(cfg, cache_len or S)
 

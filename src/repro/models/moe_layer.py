@@ -76,6 +76,26 @@ def _capacity(tokens: int, num_experts: int, k: int, factor: float) -> int:
     return _capacity_from_assignments(tokens * k, num_experts, factor)
 
 
+def dense_capacity(tokens: int) -> int:
+    """Per-expert queue capacity of the dense no-drop mode: one expert can
+    receive at most one copy of each token, so C = the group's token count
+    (rounded up for lane layouts) guarantees zero overflow."""
+    return max(8, ((tokens + 7) // 8) * 8)
+
+
+DISPATCH_MODES = ("capacity", "dense", "ragged")
+
+
+def resolve_dispatch(dispatch, no_drop: bool) -> str:
+    """Normalise the dispatch-mode spelling: an explicit ``dispatch``
+    string wins; otherwise the legacy ``no_drop`` flag selects between
+    GShard-capacity (False) and dense no-drop (True)."""
+    if dispatch is None:
+        return "dense" if no_drop else "capacity"
+    assert dispatch in DISPATCH_MODES, dispatch
+    return dispatch
+
+
 def topk_routing(router_logits: jnp.ndarray, k: int):
     """Reference routing: softmax over experts then iterative top-k.
 
@@ -92,6 +112,101 @@ def topk_routing(router_logits: jnp.ndarray, k: int):
     return weights, mask
 
 
+def _one_hot_expert_ffn(p: dict, cfg, xg: jnp.ndarray, weights, mask, *,
+                        dispatch: str, k: Optional[int],
+                        n_assign: Optional[int], lora: dict,
+                        lora_scale: float, shard_fns: dict):
+    """GShard one-hot dispatch + expert FFN + combine.
+
+    ``xg``: (G, Tg, D) grouped tokens; ``weights``/``mask``: (G, Tg, E).
+    ``dispatch="capacity"`` drops tokens past
+    ``C = ceil(assignments·cf / E)``; ``dispatch="dense"`` is the
+    loss-free variant with ``C = Tg`` (worst-case padding).  Capacity
+    scales with the TOTAL expert assignments: on the adaptive path a
+    mixed batch's ``n_assign`` follows sum(k_i), so constrained slots
+    genuinely shrink the expert workload (FLAME's FLOPs-adaptivity, per
+    slot instead of per client)."""
+    m = cfg.moe
+    G, Tg, D = xg.shape
+    E = m.num_experts
+    sf = shard_fns
+    if dispatch == "dense":
+        C = dense_capacity(Tg)
+    elif n_assign is not None:
+        C = _capacity_from_assignments(n_assign, E, m.capacity_factor)
+    else:
+        C = _capacity(Tg, E, k, m.capacity_factor)
+    # position of each token within its expert's per-group queue
+    pos_in_expert = (jnp.cumsum(mask, axis=1) - 1.0) * mask       # (G, Tg, E)
+    keep = (pos_in_expert < C) & (mask > 0)
+    pos_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), C,
+                            dtype=xg.dtype)                       # (G,Tg,E,C)
+    dispatch_oh = pos_oh * keep[..., None].astype(xg.dtype)
+    combine = dispatch_oh * weights[..., None].astype(xg.dtype)
+    if "dispatch" in sf:
+        # keep the dispatch one-hot group-sharded with the FULL expert dim —
+        # the E→model restriction happens on the (much smaller) slot tensor,
+        # where it is a local slice.  Without this GSPMD all-gathers the
+        # (G,Tg,E,C) one-hot per layer (EXPERIMENTS.md §Perf H1).
+        dispatch_oh = sf["dispatch"](dispatch_oh)
+    if "combine" in sf:
+        # the combine one-hot IS E→model-sharded so the combine einsum
+        # contracts the local expert slice and all-reduces the (G,Tg,D)
+        # token output — 3.7× less traffic than gathering expert outputs
+        combine = sf["combine"](combine)
+
+    # gather token slots: (G, E, C, D) — the expert all-to-all boundary
+    slots = jnp.einsum("gtec,gtd->gecd", dispatch_oh, xg)
+    if "slots" in sf:
+        slots = sf["slots"](slots)
+
+    # ----- expert FFN (SwiGLU) with per-expert LoRA -----
+    # kernels=cfg.kernels: on the pallas backend each matmul is the fused
+    # base+bypass lora_matmul_experts kernel (docs/kernels.md)
+    gate = lora_expert_einsum(slots, p["experts"]["w1"], lora.get("w1"),
+                              lora_scale, kernels=cfg.kernels)
+    up = lora_expert_einsum(slots, p["experts"]["w3"], lora.get("w3"),
+                            lora_scale, kernels=cfg.kernels)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    eo = lora_expert_einsum(h, p["experts"]["w2"], lora.get("w2"),
+                            lora_scale, kernels=cfg.kernels)
+
+    eo = sf["slots"](eo) if "slots" in sf else eo
+    out = jnp.einsum("gtec,gecd->gtd", combine, eo)               # (G, Tg, D)
+    if "out" in sf:
+        out = sf["out"](out)
+    return out
+
+
+def _ragged_expert_ffn(p: dict, cfg, x2d: jnp.ndarray, weights, mask, *,
+                       budget: int, max_k: int, lora: dict,
+                       lora_scale: float):
+    """Sort-based ragged dispatch + expert FFN + combine (loss-free AND
+    budget-proportional — kernels/ragged_dispatch.py).
+
+    ``x2d``: (T, D) flat tokens; ``weights``/``mask``: (T, E);
+    ``budget``: static worst-case assignment count; ``max_k``: static
+    per-token selection cap.  Every op dispatches through the kernel
+    backend (Pallas forward + reference backward on the pallas path)."""
+    from ..kernels import ragged_dispatch as ragged_mod
+    plan = ragged_mod.ragged_plan(mask, weights, budget=budget, max_k=max_k)
+    xs = kernel_backend.ragged_gather(cfg.kernels, x2d, plan.src, plan.valid)
+
+    def mm(inp, key):
+        lp = lora.get(key)
+        return kernel_backend.ragged_expert_matmul(
+            cfg.kernels, inp, plan.block_expert, p["experts"][key],
+            None if lp is None else lp["a"], None if lp is None else lp["b"],
+            scale=lora_scale)
+
+    gate = mm(xs, "w1")
+    up = mm(xs, "w3")
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    eo = mm(h, "w2")
+    return kernel_backend.ragged_combine(cfg.kernels, eo, plan.rows,
+                                         plan.wrank)
+
+
 def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
               rescaler: Optional[jnp.ndarray] = None,
               lora: Optional[dict] = None, lora_scale: float = 0.0,
@@ -100,7 +215,8 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
               num_groups: int = 1,
               shard_fns: Optional[dict] = None,
               slot_mask: Optional[jnp.ndarray] = None,
-              no_drop: bool = False):
+              no_drop: bool = False,
+              dispatch: Optional[str] = None):
     """x: (B, S, D) -> (out (B,S,D), MoEAux).
 
     ``k`` is static (client budget k_i): an ``int`` applied to every token,
@@ -117,15 +233,24 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
     engine masks its free slots this way; without it, garbage rows in a
     slotted decode batch could evict real tokens under GShard capacity.
 
-    ``no_drop``: loss-free dispatch — capacity covers the worst case
-    (every token could rank any one expert in its top-k), so no token can
-    EVER fall back to the residual stream.  This is the serving engine's
-    default contract: with capacity-limited dispatch, which tokens drop
-    depends on which rows happen to share a batch, so a request's output
-    would depend on the admission schedule — continuous batching must not
-    change results.  Costs dispatch width (C = T_g instead of
-    ~T_g·k/E·cf): training and the throughput-mode bench keep the
-    capacity-limited default.
+    ``dispatch`` selects among three token-dispatch strategies (see
+    docs/kernels.md §MoE dispatch modes for the trade-off table):
+
+    * ``"capacity"`` (the default) — GShard one-hot dispatch with
+      ``C = ceil(assignments·cf / E)``; tokens past an expert's capacity
+      fall back to the residual stream.  The training mode.
+    * ``"dense"`` — the same one-hot dispatch with ``C = T_g``: loss-free
+      (no token can EVER drop, so co-batched rows cannot change a row's
+      result) but every expert pays worst-case padding — compute no
+      longer follows the activated budget.
+    * ``"ragged"`` — sort-based dispatch (kernels/ragged_dispatch.py):
+      loss-free like ``"dense"`` AND compute-proportional to the
+      activated budget (``T·k``, or ``S·sum(slot_k)`` per-slot) like
+      ``"capacity"``.  Routes globally (requires ``num_groups == 1``,
+      no grouped-sharding path yet) — the serving engine's default.
+
+    ``no_drop`` is the legacy alias: ``True`` means ``dispatch="dense"``
+    (an explicit ``dispatch`` wins).
 
     ``num_groups``: GShard routing groups.  Capacity and the dispatch/
     combine one-hots are *per-group* ``(G, T_g, E, C_g)`` so when the token
@@ -142,6 +267,7 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
     assert T % G == 0, (T, G)
     Tg = T // G
     xg = x.reshape(G, Tg, D)
+    dispatch = resolve_dispatch(dispatch, no_drop)
 
     if isinstance(k, (tuple, list)):
         assert len(k) == B, (len(k), B)
@@ -177,67 +303,30 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
         # routing semantics are identical to topk_routing below
         weights, mask, counts = kernel_backend.router(
             cfg.kernels, logits.reshape(T, E), k)                 # (T, E) fp32
-    weights = weights.reshape(G, Tg, E)
-    mask = mask.reshape(G, Tg, E)
     # Switch-style load-balance aux loss (kept for completeness; the paper
     # fine-tunes with the router frozen so this is usually unused).
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    lb = E * jnp.mean(probs.mean((0, 1)) * mask.mean((0, 1))) * E
-
-    # ----- capacity-based dispatch (per group) -----
-    # Compute scales with the TOTAL expert assignments: on the adaptive
-    # path a mixed batch's capacity follows sum(k_i), so constrained slots
-    # genuinely shrink the expert workload (FLAME's FLOPs-adaptivity,
-    # per slot instead of per client).
-    if no_drop:
-        # one expert can receive at most one copy of each token, so
-        # C = T_g guarantees zero overflow (rounded up for lane layouts)
-        C = max(8, ((Tg + 7) // 8) * 8)
-    elif adaptive:
-        C = _capacity_from_assignments(S * sum(k_slots), E, m.capacity_factor)
-    else:
-        C = _capacity(Tg, E, k, m.capacity_factor)
-    # position of each token within its expert's per-group queue
-    pos_in_expert = (jnp.cumsum(mask, axis=1) - 1.0) * mask       # (G, Tg, E)
-    keep = (pos_in_expert < C) & (mask > 0)
-    pos_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), C,
-                            dtype=x.dtype)                        # (G,Tg,E,C)
-    dispatch = pos_oh * keep[..., None].astype(x.dtype)
-    combine = dispatch * weights[..., None].astype(x.dtype)
+    lb = E * jnp.mean(probs.mean((0, 1))
+                      * mask.reshape(G, Tg, E).mean((0, 1))) * E
     sf = shard_fns or {}
-    if "dispatch" in sf:
-        # keep the dispatch one-hot group-sharded with the FULL expert dim —
-        # the E→model restriction happens on the (much smaller) slot tensor,
-        # where it is a local slice.  Without this GSPMD all-gathers the
-        # (G,Tg,E,C) one-hot per layer (EXPERIMENTS.md §Perf H1).
-        dispatch = sf["dispatch"](dispatch)
-    if "combine" in sf:
-        # the combine one-hot IS E→model-sharded so the combine einsum
-        # contracts the local expert slice and all-reduces the (G,Tg,D)
-        # token output — 3.7× less traffic than gathering expert outputs
-        combine = sf["combine"](combine)
-
-    # gather token slots: (G, E, C, D) — the expert all-to-all boundary
-    slots = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
-    if "slots" in sf:
-        slots = sf["slots"](slots)
-
-    # ----- expert FFN (SwiGLU) with per-expert LoRA -----
-    # kernels=cfg.kernels: on the pallas backend each matmul is the fused
-    # base+bypass lora_matmul_experts kernel (docs/kernels.md)
     le = (lora or {}).get("experts", {})
-    gate = lora_expert_einsum(slots, p["experts"]["w1"], le.get("w1"),
-                              lora_scale, kernels=cfg.kernels)
-    up = lora_expert_einsum(slots, p["experts"]["w3"], le.get("w3"),
-                            lora_scale, kernels=cfg.kernels)
-    h = jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
-    eo = lora_expert_einsum(h, p["experts"]["w2"], le.get("w2"), lora_scale,
-                            kernels=cfg.kernels)
 
-    eo = sf["slots"](eo) if "slots" in sf else eo
-    out = jnp.einsum("gtec,gecd->gtd", combine, eo)               # (G, Tg, D)
-    if "out" in sf:
-        out = sf["out"](out)
+    if dispatch == "ragged":
+        assert G == 1, "ragged dispatch routes globally (num_groups == 1)"
+        assert not sf, "ragged dispatch has no grouped-sharding path yet"
+        budget = S * sum(k_slots) if adaptive else T * k
+        out = _ragged_expert_ffn(p, cfg, xg.reshape(T, D), weights, mask,
+                                 budget=budget,
+                                 max_k=(max_k if adaptive else k),
+                                 lora=le, lora_scale=lora_scale)
+        out = out.reshape(G, Tg, D)
+    else:
+        n_assign = S * sum(k_slots) if adaptive else None
+        out = _one_hot_expert_ffn(p, cfg, xg, weights.reshape(G, Tg, E),
+                                  mask.reshape(G, Tg, E), dispatch=dispatch,
+                                  k=None if adaptive else k,
+                                  n_assign=n_assign, lora=le,
+                                  lora_scale=lora_scale, shard_fns=sf)
 
     if rescaler is not None:
         r = rescaler.astype(out.dtype)

@@ -137,14 +137,26 @@ class ServingEngine:
     identical (tests/test_paged_kv.py).  Models with no attention layers
     (pure SSM) have O(1)/request state and always use the slotted pool.
 
-    ``no_drop`` (default True): loss-free MoE dispatch — with
-    capacity-limited GShard dispatch, which tokens overflow an expert
-    depends on which rows share a prefill bucket or decode step, so a
-    request's OUTPUT would depend on the admission schedule.  Serving
-    must not let batching change results (it is also what makes the
-    paged-vs-slotted differential well-defined).  ``no_drop=False``
-    restores capacity-limited dispatch, where expert compute follows
-    ``sum(slot_k)`` — the throughput mode the adaptive-k bench measures.
+    ``dispatch`` (default ``"ragged"``): MoE token-dispatch mode.  With
+    capacity-limited GShard dispatch (``"capacity"``), which tokens
+    overflow an expert depends on which rows share a prefill bucket or
+    decode step, so a request's OUTPUT would depend on the admission
+    schedule — serving must not let batching change results (it is also
+    what makes the paged-vs-slotted differential well-defined).  Both
+    loss-free modes guarantee schedule-independence:
+
+    * ``"ragged"`` — sort-based dispatch (kernels/ragged_dispatch.py):
+      row-isolated by construction AND expert compute follows
+      ``sum(slot_k)``, so constrained slots genuinely decode cheaper.
+      The default.
+    * ``"dense"`` — one-hot dispatch with capacity pinned to the token
+      count (the pre-ragged loss-free mode, kept as the differential
+      oracle): worst-case padding, compute flat in ``slot_k``.
+    * ``"capacity"`` — the capacity-limited throughput mode the
+      adaptive-k bench measures; batching MAY change results.
+
+    ``no_drop`` is the legacy alias (``True`` -> ``"dense"``, ``False``
+    -> ``"capacity"``); leave both unset for the ragged default.
     """
 
     def __init__(self, cfg, params: PyTree, *, lora: Optional[PyTree] = None,
@@ -152,9 +164,15 @@ class ServingEngine:
                  num_slots: int = 8, slot_len: int = 64,
                  slot_k: Optional[Sequence[int]] = None,
                  kv_layout: str = "paged", block_size: int = 16,
-                 num_blocks: Optional[int] = None, no_drop: bool = True):
+                 num_blocks: Optional[int] = None,
+                 no_drop: Optional[bool] = None,
+                 dispatch: Optional[str] = None):
         assert cfg.num_codebooks == 0, "serving engine: text models only"
         assert kv_layout in ("paged", "slotted"), kv_layout
+        if dispatch is None:
+            dispatch = ("ragged" if no_drop is None
+                        else ("dense" if no_drop else "capacity"))
+        assert dispatch in ("ragged", "dense", "capacity"), dispatch
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -206,7 +224,8 @@ class ServingEngine:
 
         moe_k = self._moe_k
         page_span = self.pool.attn_len if self.paged else None
-        self.no_drop = no_drop
+        self.dispatch = dispatch
+        self.no_drop = dispatch != "capacity"    # loss-free?
 
         # the pool cache is donated: the engine replaces its reference with
         # the returned cache every step, and donation lets XLA update the
@@ -222,7 +241,7 @@ class ServingEngine:
                     cfg, params, cache, tokens, pos, trainable=trainable,
                     k=moe_k, slot_mask=active if cfg.moe.enabled else None,
                     block_table=tables, page_span=page_span,
-                    no_drop=no_drop)
+                    dispatch=dispatch)
                 return logits[:, 0].astype(jnp.float32), new_cache
         else:
             @partial(jax.jit, donate_argnums=(2,))
@@ -230,22 +249,31 @@ class ServingEngine:
                 logits, new_cache = model_lib.decode_step(
                     cfg, params, cache, tokens, pos, trainable=trainable,
                     k=moe_k, slot_mask=active if cfg.moe.enabled else None,
-                    no_drop=no_drop)
+                    dispatch=dispatch)
                 return logits[:, 0].astype(jnp.float32), new_cache
 
         @partial(jax.jit, static_argnames=("k",))
         def _prefill_fn(params, trainable, prompts, real, k):
-            if no_drop and cfg.moe.enabled:
-                # loss-free prefill, one routing group PER ROW with
-                # capacity = the row's own token count: a row's result
-                # cannot depend on co-batched rows (bucket-padding rows
-                # isolate themselves), and dispatch cost stays linear in
-                # the bucket instead of quadratic (C would otherwise be
-                # the whole bucket's token count)
+            if dispatch == "ragged" and cfg.moe.enabled:
+                # ragged dispatch is row-isolated by construction (each
+                # token's output depends only on its own assignments), so
+                # prefill runs ONE routing group per bucket — no per-row
+                # group workaround, and bucket-padding rows cannot touch
+                # real rows
+                logits, cache = model_lib.prefill(
+                    cfg, params, prompts, trainable=trainable, k=k,
+                    cache_len=slot_len, dispatch="ragged")
+            elif dispatch == "dense" and cfg.moe.enabled:
+                # loss-free one-hot prefill, one routing group PER ROW
+                # with capacity = the row's own token count: a row's
+                # result cannot depend on co-batched rows (bucket-padding
+                # rows isolate themselves), and dispatch cost stays
+                # linear in the bucket instead of quadratic (C would
+                # otherwise be the whole bucket's token count)
                 logits, cache = model_lib.prefill(
                     cfg, params, prompts, trainable=trainable, k=k,
                     cache_len=slot_len, num_groups=prompts.shape[0],
-                    no_drop=True)
+                    dispatch="dense")
             else:
                 logits, cache = model_lib.prefill(
                     cfg, params, prompts, trainable=trainable, k=k,

@@ -73,7 +73,21 @@ class _RowPool:
 
     def take(self, slot: int) -> None:
         """Claim a specific free slot (scheduler-chosen assignment)."""
+        if slot not in self._free:
+            raise ValueError(
+                f"{type(self).__name__}.take({slot}): slot is not free "
+                f"(free: {self.free_slots})")
         self._free.remove(slot)
+
+    def _require_live(self, slots: Sequence[int]) -> None:
+        """Guard for cache writes: every target row must be claimed.
+        Writing into a free row would silently corrupt whatever request
+        is admitted there next — raise instead."""
+        dead = [s for s in slots if s in self._free]
+        if dead:
+            raise ValueError(
+                f"{type(self).__name__}.write: slots {dead} are free "
+                f"(allocate/take them first)")
 
     def release(self, slot: int) -> None:
         assert 0 <= slot < self.num_slots and slot not in self._free, slot
@@ -117,6 +131,7 @@ class SlotPool(_RowPool):
         ``lengths``: per-slot prompt length, i.e. the position the first
         decode step will write.
         """
+        self._require_live(slots)
         idx = np.asarray(list(slots), np.int32)
         nb = len(idx)
 
@@ -283,6 +298,7 @@ class BlockPool(_RowPool):
         """
         slots = [int(s) for s in slots]
         lengths = [int(n) for n in lengths]
+        self._require_live(slots)
         for s, L in zip(slots, lengths):
             self.alloc_prompt(s, L)
 

@@ -1,0 +1,364 @@
+"""Dispatch-equivalence suite: the ragged (sort-based) MoE dispatch is
+bit-consistent with the loss-free oracles, for outputs AND gradients.
+
+Three independent implementations of "route every selected token":
+
+* **ragged** — counting-sort dispatch (kernels/ragged_dispatch.py), the
+  serving default: loss-free AND budget-proportional;
+* **dense no-drop** — one-hot dispatch with capacity pinned to the token
+  count (``dispatch="dense"``), the pre-ragged loss-free mode;
+* **naive** — a per-token numpy float64 loop straight off the math:
+  softmax -> top-k -> renormalise -> sum of expert FFNs.
+
+The differential sweeps both kernel backends (reference jnp / Pallas
+interpreter), k in {1, 2, full}, mixed per-slot budget tuples, and
+prefill/decode shapes; gradients flow through the ragged ops' custom_vjp
+(kernel forward, reference backward).  GShard-capacity dispatch joins the
+equivalence class whenever its capacity provably does not bind.
+
+The property section (hypothesis under the derandomized CI profile — see
+tests/test_properties.py — with an always-on seeded sweep of the same
+drivers) locks the dispatch invariants: token conservation, permutation
+invariance, and free-slot isolation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.configs.base import KernelConfig
+from repro.kernels import ragged_dispatch as ragged_mod
+from repro.kernels.ref import adaptive_topk_router_ref
+from repro.models import model as M
+from repro.models import moe_layer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+CFG = tiny_moe()                       # 4 experts, top_k 2, fp32
+E = CFG.moe.num_experts
+D = CFG.d_model
+H = CFG.moe.d_expert
+KEY = jax.random.PRNGKey(0)
+P = moe_layer.init_moe(KEY, CFG)
+LORA_SCALE = 0.5
+BACKENDS = ("reference", "pallas")
+SHAPES = ((6, 1), (2, 8))              # decode-like, prefill-like
+
+
+def _make_lora(key, rank: int = 2) -> dict:
+    ks = jax.random.split(key, 6)
+    mk = lambda k_, i, o: jax.random.normal(k_, (E, i, o), jnp.float32) * .05
+    return {"experts": {
+        "w1": {"a": mk(ks[0], D, rank), "b": mk(ks[1], rank, H)},
+        "w3": {"a": mk(ks[2], D, rank), "b": mk(ks[3], rank, H)},
+        "w2": {"a": mk(ks[4], H, rank), "b": mk(ks[5], rank, D)},
+    }}
+
+
+LORA = _make_lora(jax.random.fold_in(KEY, 7))
+
+
+def _cfg(backend: str):
+    return CFG.replace(kernels=KernelConfig(backend=backend))
+
+
+def _x(key, B, S):
+    return jax.random.normal(key, (B, S, D), jnp.float32)
+
+
+# ==========================================================================
+# the naive per-token loop oracle (numpy float64)
+# ==========================================================================
+
+def naive_moe(x, k_tok, *, lora=None, lora_scale: float = 0.0):
+    """Per-token reference straight off the math, in float64: softmax over
+    experts, iterative-argmax top-``k_tok[t]``, renormalise, sum the
+    selected experts' SwiGLU FFNs (+ LoRA bypass) weighted by the
+    renormalised probabilities."""
+    B, S, _ = x.shape
+    xv = np.asarray(x, np.float64).reshape(-1, D)
+    router = np.asarray(P["router"], np.float64)
+    exp = {n: np.asarray(P["experts"][n], np.float64)
+           for n in ("w1", "w3", "w2")}
+    lp = {}
+    if lora is not None:
+        lp = {n: (np.asarray(lora["experts"][n]["a"], np.float64),
+                  np.asarray(lora["experts"][n]["b"], np.float64))
+              for n in ("w1", "w3", "w2")}
+
+    def mm(v, name, e):
+        y = v @ exp[name][e]
+        if lp:
+            a, b = lp[name]
+            y = y + (v @ a[e]) @ b[e] * lora_scale
+        return y
+
+    out = np.zeros_like(xv)
+    for t, xt in enumerate(xv):
+        logits = xt @ router
+        probs = np.exp(logits - logits.max())
+        probs /= probs.sum()
+        sel = np.argsort(-probs, kind="stable")[:int(k_tok[t])]
+        if len(sel) == 0:
+            continue
+        w = probs[sel] / probs[sel].sum()
+        for e, wi in zip(sel, w):
+            gate = mm(xt, "w1", e)
+            up = mm(xt, "w3", e)
+            h = (gate / (1.0 + np.exp(-gate))) * up      # silu(gate) * up
+            out[t] += wi * mm(h, "w2", e)
+    return out.reshape(B, S, D)
+
+
+def _k_tok(k, B, S):
+    ks = (k,) * B if isinstance(k, int) else k
+    return np.repeat(np.asarray(ks, np.int64), S)
+
+
+# ==========================================================================
+# three-way differential: ragged == dense no-drop == naive loop
+# ==========================================================================
+
+@pytest.mark.parametrize("shape", SHAPES, ids=["decode", "prefill"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_three_way_outputs(backend, shape):
+    B, S = shape
+    cfg = _cfg(backend)
+    x = _x(jax.random.fold_in(KEY, 11 * B + S), B, S)
+    mixed = tuple(([1, 2, E] * B)[:B])
+    for k in (1, 2, E, mixed):
+        dense, _ = moe_layer.apply_moe(P, cfg, x, k=k, dispatch="dense",
+                                       lora=LORA, lora_scale=LORA_SCALE)
+        ragged, _ = moe_layer.apply_moe(P, cfg, x, k=k, dispatch="ragged",
+                                        lora=LORA, lora_scale=LORA_SCALE)
+        np.testing.assert_allclose(np.asarray(ragged), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-6)
+        want = naive_moe(x, _k_tok(k, B, S), lora=LORA,
+                         lora_scale=LORA_SCALE)
+        np.testing.assert_allclose(np.asarray(ragged), want,
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_three_way_grads(backend):
+    """Gradients through the ragged custom_vjp ops equal the dense
+    no-drop gradients — w.r.t. tokens, router, expert weights, AND the
+    LoRA factors — for uniform and mixed per-slot budgets."""
+    cfg = _cfg(backend)
+    B, S = 4, 2
+    x = _x(jax.random.fold_in(KEY, 21), B, S)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 22), (B, S, D))
+
+    def loss(p_, x_, lora_, k, mode):
+        out, _ = moe_layer.apply_moe(p_, cfg, x_, k=k, dispatch=mode,
+                                     lora=lora_, lora_scale=LORA_SCALE)
+        return (out * cot).sum()
+
+    for k in (2, (1, 2, E, 1)):
+        gd = jax.grad(loss, argnums=(0, 1, 2))(P, x, LORA, k, "dense")
+        gr = jax.grad(loss, argnums=(0, 1, 2))(P, x, LORA, k, "ragged")
+        for a, b in zip(jax.tree.leaves(gd), jax.tree.leaves(gr)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_ragged_grads_backend_parity():
+    """The pallas path's gradients are the reference gradients evaluated
+    at kernel-forward primals (backend.py contract) — so the two backends
+    must agree on the ragged path like they do on every other op."""
+    B, S = 4, 2
+    x = _x(jax.random.fold_in(KEY, 31), B, S)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 32), (B, S, D))
+
+    def loss(p_, x_, lora_, backend):
+        out, _ = moe_layer.apply_moe(p_, _cfg(backend), x_, k=(1, 2, 2, E),
+                                     dispatch="ragged", lora=lora_,
+                                     lora_scale=LORA_SCALE)
+        return (out * cot).sum()
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(P, x, LORA, "reference")
+    g_pl = jax.grad(loss, argnums=(0, 1, 2))(P, x, LORA, "pallas")
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pl)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_capacity_parity_when_not_binding(backend):
+    """GShard-capacity dispatch joins the equivalence class whenever its
+    capacity provably cannot bind: with capacity_factor = E the queue
+    capacity exceeds the total assignment count, so no token can drop."""
+    cfg = _cfg(backend).replace(moe=dataclasses.replace(
+        CFG.moe, capacity_factor=float(E)))
+    B, S = 4, 4
+    x = _x(jax.random.fold_in(KEY, 41), B, S)
+    for k in (1, 2):
+        # premise check: C = assignments·E/E + 1 > any per-expert count
+        n_assign = B * S * k
+        C = moe_layer._capacity(B * S, E, k, float(E))
+        assert C > n_assign
+        cap, _ = moe_layer.apply_moe(P, cfg, x, k=k, dispatch="capacity")
+        rag, _ = moe_layer.apply_moe(P, cfg, x, k=k, dispatch="ragged")
+        np.testing.assert_allclose(np.asarray(rag), np.asarray(cap),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_model_level_dispatch_threading():
+    """prefill/decode_step thread ``dispatch`` end to end: ragged and
+    dense produce the same logits and the same decode caches."""
+    prompts = jnp.asarray(np.random.default_rng(3).integers(
+        0, CFG.vocab_size, (2, 6)), jnp.int32)
+    lr, cr = M.prefill(CFG, P_MODEL, prompts, k=2, cache_len=8,
+                       dispatch="ragged")
+    ld, cd = M.prefill(CFG, P_MODEL, prompts, k=2, cache_len=8,
+                       dispatch="dense")
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(ld),
+                               rtol=1e-5, atol=1e-6)
+    tok = jnp.argmax(lr, axis=-1).astype(jnp.int32)
+    sr, _ = M.decode_step(CFG, P_MODEL, cr, tok, 6, k=(1, 2),
+                          dispatch="ragged")
+    sd, _ = M.decode_step(CFG, P_MODEL, cd, tok, 6, k=(1, 2),
+                          dispatch="dense")
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(sd),
+                               rtol=1e-5, atol=1e-6)
+
+
+P_MODEL = M.init_params(jax.random.PRNGKey(5), CFG)
+
+
+# ==========================================================================
+# dispatch invariants (hypothesis in CI, seeded sweep everywhere)
+# ==========================================================================
+
+def _random_routing(seed: int):
+    """Random adaptive routing instance: (T, E) router outputs plus the
+    per-token budget vector (0 = masked out entirely)."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 13))
+    logits = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    k_tok = jnp.asarray(rng.integers(0, E + 1, (T,)), jnp.int32)
+    weights, mask, _ = adaptive_topk_router_ref(logits, k_tok, max_k=E)
+    return T, k_tok, weights, mask
+
+
+def _drive_token_conservation(seed: int) -> None:
+    """Every selected (token, expert) pair occupies exactly one live
+    buffer row of the right expert segment; the inverse plan visits each
+    such row exactly once with the router's combine weight; nothing else
+    is live."""
+    T, k_tok, weights, mask = _random_routing(seed)
+    bm = ragged_mod.BLOCK_M
+    plan = ragged_mod.ragged_plan(mask, weights, budget=T * E, max_k=E)
+    src = np.asarray(plan.src)
+    valid = np.asarray(plan.valid)
+    be = np.asarray(plan.block_expert)
+    rows = np.asarray(plan.rows)
+    wrank = np.asarray(plan.wrank)
+    m = np.asarray(mask)
+    w = np.asarray(weights)
+
+    # forward plan: live rows <-> selected assignments, 1:1
+    live = {(int(src[i]), int(be[i // bm]))
+            for i in range(len(src)) if valid[i]}
+    selected = {(t, e) for t in range(T) for e in range(E) if m[t, e] > 0}
+    assert valid.sum() == m.sum() == len(live)
+    assert live == selected
+
+    # inverse plan: each token's live ranks hit distinct rows of its own
+    # assignments, carrying exactly the router weight for that expert
+    for t in range(T):
+        hit = [(int(rows[t, j]), float(wrank[t, j]))
+               for j in range(E) if wrank[t, j] > 0]
+        assert len({r for r, _ in hit}) == len(hit) == int(k_tok[t])
+        for r, wt in hit:
+            assert src[r] == t and valid[r]
+            e = int(be[r // bm])
+            np.testing.assert_allclose(wt, w[t, e], rtol=1e-6)
+        # combining all-ones expert outputs yields the weight sum: one
+        # combine per selected token, total weight exactly 1
+        np.testing.assert_allclose(
+            wrank[t].sum(), 1.0 if int(k_tok[t]) else 0.0, rtol=1e-5,
+            atol=1e-7)
+
+
+def _drive_permutation_invariance(seed: int) -> None:
+    """Shuffling rows of a decode batch (and their budgets) permutes the
+    outputs identically — dispatch order is invisible."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(2, 9))
+    ks = tuple(int(v) for v in rng.integers(1, E + 1, (B,)))
+    x = jnp.asarray(rng.normal(size=(B, 1, D)), jnp.float32)
+    perm = rng.permutation(B)
+    out, _ = moe_layer.apply_moe(P, CFG, x, k=ks, dispatch="ragged")
+    out_p, _ = moe_layer.apply_moe(
+        P, CFG, x[perm], k=tuple(ks[i] for i in perm), dispatch="ragged")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out)[perm],
+                               rtol=1e-6, atol=1e-7)
+
+
+def _drive_free_slot_isolation(seed: int) -> None:
+    """slot_mask-zeroed rows can never influence live rows: filling the
+    masked rows with arbitrary garbage leaves the live rows' outputs
+    byte-identical, and the masked rows' outputs zero."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(3, 9))
+    n_dead = int(rng.integers(1, B))
+    mask_np = np.ones((B,), np.float32)
+    mask_np[rng.choice(B, n_dead, replace=False)] = 0.0
+    slot_mask = jnp.asarray(mask_np)
+    base = rng.normal(size=(B, 1, D))
+    fills = [base.copy(), base.copy()]
+    fills[1][mask_np == 0] = rng.normal(size=(n_dead, 1, D)) * 100.0
+    outs = []
+    for f in fills:
+        out, _ = moe_layer.apply_moe(P, CFG, jnp.asarray(f, jnp.float32),
+                                     k=2, slot_mask=slot_mask,
+                                     dispatch="ragged")
+        outs.append(np.asarray(out))
+    np.testing.assert_array_equal(outs[0][mask_np > 0],
+                                  outs[1][mask_np > 0])
+    np.testing.assert_allclose(outs[1][mask_np == 0], 0.0)
+
+
+# seeded sweep: always runs, hypothesis or not
+@pytest.mark.parametrize("seed", range(10))
+def test_token_conservation_seeded(seed):
+    _drive_token_conservation(seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_permutation_invariance_seeded(seed):
+    _drive_permutation_invariance(seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_free_slot_isolation_seeded(seed):
+    _drive_free_slot_isolation(seed)
+
+
+if HAVE_HYPOTHESIS:
+    # same deterministic profile as tests/test_properties.py: derandomized,
+    # bounded examples, no deadline
+    _SETTINGS = settings(max_examples=25, deadline=None, derandomize=True)
+
+    @_SETTINGS
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_token_conservation_hypothesis(seed):
+        _drive_token_conservation(seed)
+
+    @_SETTINGS
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_permutation_invariance_hypothesis(seed):
+        _drive_permutation_invariance(seed)
+
+    @_SETTINGS
+    @given(st.integers(0, 2 ** 32 - 1))
+    def test_free_slot_isolation_hypothesis(seed):
+        _drive_free_slot_isolation(seed)

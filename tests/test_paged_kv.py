@@ -300,6 +300,76 @@ def test_block_pool_write_roundtrip():
 
 
 # ==========================================================================
+# negative paths: pool MISUSE must raise instead of corrupting the free
+# list (the interleaving drivers below only exercise legal sequences)
+# ==========================================================================
+
+def test_slot_pool_misuse_raises():
+    import jax.numpy as jnp
+    pool = SlotPool(CFG, num_slots=2, slot_len=8)
+    pool.take(0)
+    with pytest.raises(ValueError, match="not free"):
+        pool.take(0)                                 # double take
+    with pytest.raises(AssertionError):
+        pool.release(1)                              # release a free slot
+    prompt = RNG.integers(0, CFG.vocab_size, (1, 4)).astype(np.int32)
+    _, piece = M.prefill(CFG, PARAMS, jnp.asarray(prompt), k=2,
+                         cache_len=8)
+    with pytest.raises(ValueError, match="free"):
+        pool.write([1], piece, [4])                  # write to a free slot
+    pool.take(1)
+    with pytest.raises(RuntimeError, match="no free rows"):
+        pool.allocate()                              # admit beyond the pool
+    # the failed ops corrupted nothing: both rows still live, release works
+    assert pool.num_free == 0
+    pool.release(0), pool.release(1)
+    assert pool.free_slots == [0, 1]
+
+
+def test_block_pool_write_past_reservation_raises():
+    """A write needing more blocks than the row's admission-time
+    reservation must fail (the reservation is the hard ceiling that makes
+    decode allocation infallible) — and fail WITHOUT corrupting the
+    free-list bookkeeping."""
+    import jax.numpy as jnp
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4)
+    s = pool.allocate()
+    pool.reserve(s, 4)                               # 1 block booked
+    prompt = RNG.integers(0, CFG.vocab_size, (1, 8)).astype(np.int32)
+    _, piece = M.prefill(CFG, PARAMS, jnp.asarray(prompt), k=2,
+                         cache_len=16)
+    with pytest.raises(AssertionError, match="exceed its reservation"):
+        pool.write([s], piece, [8])                  # needs 2 blocks
+    pool.check_invariants()                          # nothing leaked
+    pool.release(s)
+    assert pool.available_blocks == pool.num_blocks
+
+
+def test_block_pool_misuse_raises():
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4,
+                     num_blocks=4)
+    # (a single reservation can never exceed the pool: blocks_needed caps
+    # at the per-request span and the pool holds >= one span — the
+    # overflow paths below are all CROSS-request)
+    s = pool.allocate()
+    pool.reserve(s, 16)                              # all 4 blocks
+    with pytest.raises(AssertionError):
+        pool.reserve(s, 4)                           # double reserve
+    s2 = pool.allocate()
+    with pytest.raises(AssertionError):
+        pool.reserve(s2, 4)                          # no headroom left
+    with pytest.raises(ValueError, match="not free"):
+        pool.take(s2)                                # take a live row
+    with pytest.raises(RuntimeError, match="no free rows"):
+        pool.allocate()
+    pool.release(s), pool.release(s2)
+    with pytest.raises(AssertionError):
+        pool.release(s)                              # double free
+    pool.check_invariants()
+    assert pool.available_blocks == pool.num_blocks
+
+
+# ==========================================================================
 # property: arbitrary allocate/extend/free interleavings keep the
 # free lists intact (hypothesis in CI, seeded sweep everywhere)
 # ==========================================================================

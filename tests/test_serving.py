@@ -401,6 +401,95 @@ def test_engine_truncates_at_slot_capacity():
     assert comp.truncated and comp.n_generated == 3
 
 
+# ==========================================================================
+# ragged-dispatch serving regression: the PR 4 pool-history / admission-
+# schedule invariance traces, end to end on the paged layout, with the
+# per-row prefill-group workaround REMOVED (ragged prefill routes one
+# group per bucket — row isolation comes from the dispatch itself)
+# ==========================================================================
+
+def _ragged_trace(n=8):
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(n):
+        L = int(rng.choice((4, 8)))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, CFG.vocab_size, (L,))
+            .astype(np.int32), max_new_tokens=int(rng.choice((3, 5))),
+            k=int(rng.choice((1, 2)))))
+    return reqs
+
+
+def test_ragged_engine_admission_schedule_invariance():
+    """The same trace through paged ragged engines with different pool
+    sizes (different admission schedules, different prefill co-batching,
+    different decode co-residents) and through the slotted layout: every
+    configuration produces identical tokens, all equal to the solo naive
+    oracle at each request's own budget."""
+    reqs = _ragged_trace()
+    assert all(e.dispatch == "ragged" for e in [
+        ServingEngine(CFG, PARAMS, num_slots=1, slot_len=16, slot_k=(2,))])
+    outs = {}
+    for name, kw in (
+            ("paged_small", dict(num_slots=2, slot_k=(2, 1),
+                                 kv_layout="paged", block_size=4)),
+            ("paged_large", dict(num_slots=6, slot_k=(2,) * 3 + (1,) * 3,
+                                 kv_layout="paged", block_size=4)),
+            ("slotted", dict(num_slots=4, slot_k=(2, 2, 1, 1),
+                             kv_layout="slotted"))):
+        eng = ServingEngine(CFG, PARAMS, slot_len=16, **kw)
+        outs[name] = eng.run(reqs).tokens_by_rid()
+    for name in ("paged_large", "slotted"):
+        assert outs[name].keys() == outs["paged_small"].keys()
+        for rid in outs[name]:
+            np.testing.assert_array_equal(outs[name][rid],
+                                          outs["paged_small"][rid])
+    for r in reqs:
+        ref = naive_decode(CFG, PARAMS, r.prompt[None],
+                           r.max_new_tokens, r.k)[0]
+        np.testing.assert_array_equal(ref, outs["paged_small"][r.rid])
+
+
+def test_ragged_engine_pool_history_and_block_permutation_invariance():
+    """Paged ragged engine: a pool dirtied by earlier traffic, with its
+    free-block order permuted between runs, produces byte-identical
+    results to a fresh engine — batching state cannot change results."""
+    reqs = _ragged_trace(6)
+    eng = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                        slot_k=(2, 2, 1, 1), kv_layout="paged",
+                        block_size=4)
+    base = eng.run(reqs).tokens_by_rid()
+    for seed in (1, 2):
+        eng.pool.permute_free(seed)
+        got = eng.run(reqs).tokens_by_rid()      # dirty pool + permuted
+        assert base.keys() == got.keys()
+        for rid in base:
+            np.testing.assert_array_equal(base[rid], got[rid])
+    eng.pool.check_invariants()
+    fresh = ServingEngine(CFG, PARAMS, num_slots=4, slot_len=16,
+                          slot_k=(2, 2, 1, 1), kv_layout="paged",
+                          block_size=4)
+    got = fresh.run(reqs).tokens_by_rid()
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], got[rid])
+
+
+def test_ragged_engine_teacher_forced_nll_matches_dense():
+    """Teacher-forced NLL accounting is dispatch-invariant: the ragged
+    engine's per-request NLL equals the dense no-drop engine's."""
+    rng = np.random.default_rng(23)
+    reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=4,
+                    forced=rng.integers(0, CFG.vocab_size, (4,))
+                    .astype(np.int32)) for i in range(3)]
+    kw = dict(num_slots=3, slot_len=16, slot_k=(2,) * 3)
+    rag = ServingEngine(CFG, PARAMS, dispatch="ragged", **kw).run(reqs)
+    den = ServingEngine(CFG, PARAMS, dispatch="dense", **kw).run(reqs)
+    nll_r = {c.rid: c.nll_sum for c in rag.completions}
+    nll_d = {c.rid: c.nll_sum for c in den.completions}
+    for rid in nll_r:
+        np.testing.assert_allclose(nll_r[rid], nll_d[rid], rtol=1e-5)
+
+
 def test_engine_report_summary_keys():
     eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16)
     reqs = [Request(rid=i, prompt=PROMPTS[i], max_new_tokens=3)

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Coverage threshold gate for the hot subsystems (`make coverage`).
+
+Parses a Cobertura ``coverage.xml`` (as written by
+``pytest --cov=repro --cov-report=xml``) and fails if the aggregate line
+coverage of any named package subtree falls below the floor.  Gating only
+the correctness-critical subtrees (kernels, serving) keeps the signal
+sharp: a PR that lands untested dispatch or pool code fails CI even when
+repo-wide coverage looks fine.
+
+Usage:
+    PYTHONPATH=src python -m pytest -q --cov=repro --cov-report=xml
+    python tools/coverage_gate.py coverage.xml --min 70 \\
+        repro/kernels repro/serving
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+
+def normalise(filename: str) -> str:
+    """Class filenames may be relative to the package source dir
+    ("kernels/backend.py") or to the repo ("src/repro/kernels/..."):
+    normalise both to "repro/...."."""
+    f = filename.replace("\\", "/")
+    if "repro/" in f:
+        return "repro/" + f.split("repro/", 1)[1]
+    return "repro/" + f
+
+
+def gate(xml_path: str, targets: list, floor: float) -> int:
+    root = ET.parse(xml_path).getroot()
+    stats = {t: [0, 0] for t in targets}              # covered, total
+    for cls in root.iter("class"):
+        nf = normalise(cls.get("filename", ""))
+        owners = [t for t in targets
+                  if nf == t or nf.startswith(t.rstrip("/") + "/")]
+        if not owners:
+            continue
+        for line in cls.iter("line"):
+            hit = int(line.get("hits", "0")) > 0
+            for t in owners:
+                stats[t][0] += hit
+                stats[t][1] += 1
+    failed = False
+    for t in targets:
+        covered, total = stats[t]
+        if total == 0:
+            print(f"coverage-gate: {t}: NO LINES FOUND in {xml_path} "
+                  f"(wrong --cov target or path?)")
+            failed = True
+            continue
+        pct = 100.0 * covered / total
+        verdict = "ok" if pct >= floor else f"BELOW FLOOR {floor:.0f}%"
+        print(f"coverage-gate: {t}: {pct:.1f}% "
+              f"({covered}/{total} lines) — {verdict}")
+        failed |= pct < floor
+    return 1 if failed else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("xml", help="Cobertura coverage.xml from pytest-cov")
+    ap.add_argument("targets", nargs="+",
+                    help="package subtrees to gate, e.g. repro/kernels")
+    ap.add_argument("--min", type=float, default=70.0,
+                    help="minimum aggregate line coverage percent per "
+                         "subtree (a ratchet floor, not a target)")
+    args = ap.parse_args()
+    return gate(args.xml, args.targets, args.min)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
