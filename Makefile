@@ -15,7 +15,9 @@ test:
 # (mirrors the CI coverage job; needs pytest-cov from requirements-ci.txt)
 coverage:
 	$(PYTHON) -m pytest -q --cov=repro --cov-report=xml --cov-report=term
-	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 repro/kernels repro/serving
+	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 \
+		repro/kernels repro/serving \
+		repro/serving/sampler.py repro/serving/speculative.py
 
 # the long-running randomized stress subset (CI runs it in the smoke job)
 test-slow:

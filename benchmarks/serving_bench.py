@@ -308,6 +308,108 @@ def run(smoke: bool = False) -> None:
           f"{mix_stats['slotted']['kv_bytes'] / 2**20:.2f} MiB pool, peak "
           f"used {mix_stats['paged']['peak_kv_bytes'] / 2**20:.2f} MiB)")
 
+    # ---- 4. self-speculative decoding: draft at k=1, verify at full k ----
+    # Acceptance — and therefore speedup — depends on how well the k=1
+    # draft distribution agrees with full k.  Random init is the
+    # adversarial floor: expert outputs are independent noise, so the
+    # k=1 argmax almost never matches k=4 and acceptance sits near 1/V.
+    # Tying the experts (broadcast expert 0 across the expert axis, which
+    # makes the MoE output k-independent) is the high-agreement limit a
+    # trained FLAME model approaches — the draft IS the target, so
+    # acceptance -> 1 and the measured ratio isolates the machinery's
+    # best case: W+1 tokens for one cheap fused draft scan + one full-k
+    # verify step instead of W+1 full decode launches.  Both ends are
+    # reported; the claim tracks the high-agreement end.
+    #
+    # The batch is kept SMALL (8 slots) on purpose: speculation trades
+    # extra verify FLOPs for fewer launches, so it pays in the
+    # launch-bound low-batch regime it exists for — at 32 slots the
+    # plain step is already compute-bound and the S=W+1 verify step's
+    # extra work eats the launch saving (measured ~0.9-1.0x there).
+    from repro.serving import SpeculativeConfig
+    import jax.numpy as jnp2
+    tied = jax.tree.map(lambda x: x, params)
+    for blk in tied["blocks"].values():
+        if "moe" in blk:
+            blk["moe"]["experts"] = jax.tree.map(
+                lambda t: jnp2.broadcast_to(t[:, :1], t.shape),
+                blk["moe"]["experts"])
+    spec_slots = 8
+    spec_new = 32 if smoke else 48
+    spec_len = prompt_len + spec_new
+    rng_s = np.random.default_rng(7)
+    spec_reqs = [Request(rid=i, prompt=rng_s.integers(
+                     0, cfg.vocab_size, (prompt_len,)).astype(np.int32),
+                 max_new_tokens=spec_new, k=top_k)
+                 for i in range(2 * spec_slots)]
+
+    def _spec_engine(p, spec):
+        eng = ServingEngine(cfg, p, num_slots=spec_slots,
+                            slot_len=spec_len, slot_k=(top_k,) * spec_slots,
+                            speculative=spec)
+        eng.run([Request(rid=r.rid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens, k=r.k)
+                 for r in spec_reqs])           # compile + warmup
+        return eng
+
+    # windows 4 and 8: at acceptance ~1 the verify step cost is nearly
+    # flat in W (one batched S=W+1 launch), so doubling the window almost
+    # doubles the tokens a round's fixed launch+sync overhead amortises
+    spec_cases = [("tied", tied, None), ("tied", tied, 4), ("tied", tied, 8),
+                  ("random", params, None), ("random", params, 4)]
+    spec_engines = [(pname, W, _spec_engine(
+        p, None if W is None else SpeculativeConfig(window=W, draft_k=1)))
+        for pname, p, W in spec_cases]
+    spec_best = {}
+    for _ in range(2):                          # interleave vs host noise
+        for pname, W, eng in spec_engines:
+            rep = eng.run([Request(rid=r.rid, prompt=r.prompt,
+                                   max_new_tokens=r.max_new_tokens, k=r.k)
+                           for r in spec_reqs])
+            o = rep.summary()
+            key = (pname, W)
+            if (key not in spec_best
+                    or o["gen_tokens_per_s"]
+                    > spec_best[key]["gen_tokens_per_s"]):
+                spec_best[key] = o
+    spec_rows = []
+    spec_stats = {}
+    for pname, W, _ in spec_engines:
+        o = spec_best[(pname, W)]
+        plain = spec_best[(pname, None)]["gen_tokens_per_s"]
+        ratio = o["gen_tokens_per_s"] / max(plain, 1e-9)
+        spec_rows.append({
+            "params": pname,
+            "mode": "plain" if W is None else f"spec_W{W}",
+            "window": 0 if W is None else W,
+            "acceptance": o.get("acceptance_rate", float("nan")),
+            "draft_ms": o.get("draft_step_ms_mean", float("nan")),
+            "verify_ms": o.get("verify_step_ms_mean", float("nan")),
+            "gen_tok_per_s": o["gen_tokens_per_s"],
+            "ratio_vs_plain": ratio})
+        if W is not None:
+            spec_stats[f"{pname}_W{W}"] = {
+                "acceptance": o["acceptance_rate"],
+                "tok_per_s": o["gen_tokens_per_s"],
+                "ratio_vs_plain": ratio}
+    emit("serving_speculative", spec_rows,
+         ["params", "mode", "window", "acceptance", "draft_ms",
+          "verify_ms", "gen_tok_per_s", "ratio_vs_plain"])
+    best_key = max((k for k in spec_stats if k.startswith("tied")),
+                   key=lambda k: spec_stats[k]["ratio_vs_plain"])
+    bs = spec_stats[best_key]
+    fl = spec_stats["random_W4"]
+    print(f"# CLAIM serving: self-speculative decoding (draft k=1, one "
+          f"fused cache-read-only scan; verify full k in one step) serves "
+          f"{bs['ratio_vs_plain']:.2f}x plain tokens/s at window "
+          f"{best_key.split('_W')[1]} on the launch-bound "
+          f"{spec_slots}-slot batch with acceptance "
+          f"{bs['acceptance']:.2f} on the high-agreement (tied-expert) "
+          f"workload; the random-init floor is "
+          f"{fl['ratio_vs_plain']:.2f}x at acceptance "
+          f"{fl['acceptance']:.2f} — speculation pays exactly when the "
+          f"cheap budget agrees with the full one")
+
     print("# BENCH JSON: " + json.dumps(
         {"bench": "serving", "requests": n_req, "slots": num_slots,
          "seq_req_per_s": n_req / seq_wall,
@@ -319,7 +421,8 @@ def run(smoke: bool = False) -> None:
          "ragged_k_step_speedup": rag_speed,
          "dense_nodrop_step_ratio": dense_ratio,
          "paged_mixed": mix_stats,
-         "paged_mixed_speedup": paged_speed}))
+         "paged_mixed_speedup": paged_speed,
+         "speculative": spec_stats}))
 
     if not smoke:
         # ---- open-loop Poisson trace with a premium/economy tier mix ----

@@ -22,7 +22,8 @@ import jax
 from ..configs.base import INPUT_SHAPES
 from ..configs.registry import get_config
 from ..models import model as model_lib
-from ..serving import ServingEngine, WorkloadConfig, make_trace
+from ..serving import (ServingEngine, SpeculativeConfig, WorkloadConfig,
+                       make_trace)
 from . import steps as steps_lib
 from .mesh import make_production_mesh
 
@@ -87,6 +88,17 @@ def main() -> None:
                          "dense = loss-free one-hot at worst-case padding; "
                          "capacity = GShard capacity-limited throughput "
                          "mode (batching may change results)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative decoding: draft a window of "
+                         "tokens per slot at --draft-k through the same "
+                         "weights, verify it in one full-k step, accept "
+                         "by the exact rejection rule "
+                         "(serving/speculative.py)")
+    ap.add_argument("--window", type=int, default=4,
+                    help="speculative draft window W (tokens drafted per "
+                         "round and verified in one step)")
+    ap.add_argument("--draft-k", type=int, default=1,
+                    help="expert budget for the draft pass (the cheap k)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=float("inf"),
                     help="Poisson arrival rate (req/s); inf = closed batch")
@@ -143,18 +155,27 @@ def main() -> None:
         n_requests=args.requests, rate=args.rate,
         prompt_lens=prompt_lens, new_tokens=(args.new_tokens,),
         tier_mix=mix, vocab_size=cfg.vocab_size)
+    spec = None
+    if args.speculate:
+        if not cfg.moe.enabled:
+            raise SystemExit(f"--speculate needs an MoE arch: {cfg.name} "
+                             "has no cheaper draft budget")
+        spec = SpeculativeConfig(window=args.window, draft_k=args.draft_k)
     engine = ServingEngine(cfg, params, num_slots=args.slots,
                            slot_len=args.slot_len, slot_k=slot_k,
                            kv_layout=args.kv_layout,
                            block_size=args.block_size,
                            num_blocks=args.num_blocks,
-                           dispatch=args.dispatch)
+                           dispatch=args.dispatch,
+                           speculative=spec)
     pool_desc = (f"{engine.pool.num_blocks} x {engine.pool.block_size}"
                  f"-token KV blocks" if engine.paged
                  else "slotted KV pool")
+    spec_desc = (f", speculative W={args.window} draft_k={args.draft_k}"
+                 if spec else "")
     print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens "
           f"({pool_desc}), slot_k={engine.slot_k}, "
-          f"dispatch={engine.dispatch}")
+          f"dispatch={engine.dispatch}{spec_desc}")
     report = engine.run(make_trace(wl))
     for key, val in report.summary().items():
         print(f"  {key}: {val:.2f}" if isinstance(val, float)

@@ -202,6 +202,105 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def draft_attention(q: jnp.ndarray, k_win: jnp.ndarray, v_win: jnp.ndarray,
+                    k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                    pos: jnp.ndarray, j: jnp.ndarray, *,
+                    logit_softcap: float = 0.0) -> jnp.ndarray:
+    """One speculative-draft step's attention: frozen prefix + window buffer.
+
+    q: (B,1,H,D) RoPE'd at ``pos + j``; ``k_win``/``v_win``: (B,W,KV,D)
+    window buffer holding the draft pass's own K/V at indices ``<= j``;
+    ``k_cache``/``v_cache``: (B,Sc,KV,D) contiguous prefix, valid strictly
+    below ``pos`` (the window's start).  The prefix is never written — the
+    verify step later deposits full-k K/V at the window's positions — so a
+    W-step draft scan carries only the small buffer, not the whole cache.
+    Requires a non-wrapping cache (the serving engine guards this), so
+    the sliding-window constraint can never bind within the window.
+    """
+    B, Sc, KV, D = k_cache.shape
+    W = k_win.shape[1]
+    H = q.shape[2]
+    rep = H // KV
+    scale = jnp.asarray(D ** -0.5, jnp.float32)
+    qh = q.reshape(B, KV, rep, D)
+
+    s_old = jnp.einsum("bkrd,bskd->bkrs", qh.astype(jnp.float32),
+                       k_cache.astype(jnp.float32)) * scale
+    s_new = jnp.einsum("bkrd,btkd->bkrt", qh.astype(jnp.float32),
+                       k_win.astype(jnp.float32)) * scale
+    s_old = softcap(s_old, logit_softcap)
+    s_new = softcap(s_new, logit_softcap)
+
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    valid_old = jnp.arange(Sc)[None, :] < posb[:, None]          # (B, Sc)
+    valid_new = jnp.broadcast_to(jnp.arange(W)[None, :] <= j, (B, W))
+    valid = jnp.concatenate([valid_old, valid_new], axis=-1)     # (B, Sc+W)
+    scores = jnp.concatenate([s_old, s_new], axis=-1)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = (jnp.einsum("bkrs,bskd->bkrd", p[..., :Sc],
+                      v_cache.astype(jnp.float32))
+           + jnp.einsum("bkrt,btkd->bkrd", p[..., Sc:],
+                        v_win.astype(jnp.float32)))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def verify_attention(q: jnp.ndarray, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     pos: jnp.ndarray, *, window: int = 0,
+                     logit_softcap: float = 0.0) -> jnp.ndarray:
+    """Teacher-forced attention for an S-token speculative verify window.
+
+    q/k_new/v_new: (B,S,H|KV,D) — the window's projections, already
+    RoPE'd at absolute positions ``pos + s``; caches: (B,Sc,KV,D);
+    ``pos``: (B,) per-row window start (== the row's pre-draft cache_pos).
+
+    Query ``s`` attends the cache at indices ``< pos`` (the context
+    written by prefill + previous accepted tokens) plus window keys
+    ``t <= s``.  The cache is consumed PRE-write: positions ``>= pos``
+    may hold the draft pass's k=1 K/V, which must not leak into full-k
+    scores — the caller overwrites them with ``k_new``/``v_new`` after.
+    Requires a non-wrapping cache (``window == 0``, or every window
+    position still below the ring modulus — the serving engine guards
+    this), so cache index == absolute position.
+    """
+    B, S, H, D = q.shape
+    Sc, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    scale = jnp.asarray(D ** -0.5, jnp.float32)
+    qh = q.reshape(B, S, KV, rep, D)
+
+    s_old = jnp.einsum("bskrd,bckd->bkrsc", qh.astype(jnp.float32),
+                       k_cache.astype(jnp.float32)) * scale
+    s_new = jnp.einsum("bskrd,btkd->bkrst", qh.astype(jnp.float32),
+                       k_new.astype(jnp.float32)) * scale
+    s_old = softcap(s_old, logit_softcap)
+    s_new = softcap(s_new, logit_softcap)
+
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    qpos = posb[:, None] + jnp.arange(S)[None, :]             # (B, S)
+    idx = jnp.arange(Sc)
+    valid_old = jnp.broadcast_to(
+        idx[None, None, :] < posb[:, None, None], (B, S, Sc))
+    valid_new = jnp.broadcast_to(
+        jnp.arange(S)[None, None, :] <= jnp.arange(S)[None, :, None],
+        (B, S, S))
+    if window > 0:
+        kpos_new = posb[:, None, None] + jnp.arange(S)[None, None, :]
+        valid_old &= idx[None, None, :] > qpos[:, :, None] - window
+        valid_new &= kpos_new > qpos[:, :, None] - window
+
+    valid = jnp.concatenate([valid_old, valid_new], axis=-1)  # (B,S,Sc+S)
+    scores = jnp.concatenate([s_old, s_new], axis=-1)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = (jnp.einsum("bkrsc,bckd->bskrd", p[..., :Sc],
+                      v_cache.astype(jnp.float32))
+           + jnp.einsum("bkrst,btkd->bskrd", p[..., Sc:],
+                        v_new.astype(jnp.float32)))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # block-paged decode attention (serving/kv_cache.BlockPool)
 # --------------------------------------------------------------------------
@@ -226,6 +325,29 @@ def paged_decode_write(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     off = logical % bs
     return (k_pool.at[bi, off].set(k_tok),
             v_pool.at[bi, off].set(v_tok))
+
+
+def paged_verify_write(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                       k_win: jnp.ndarray, v_win: jnp.ndarray,
+                       block_table: jnp.ndarray, cache_pos: jnp.ndarray,
+                       *, page_span: int, window: int):
+    """Scatter an S-token verify window's K/V per row into the block pool
+    (the multi-token generalisation of :func:`paged_decode_write`): row
+    ``r`` writes logical slots ``pos + s`` for ``s in [0, S)``, which
+    overwrites the draft pass's k=1 K/V at the same positions.  Free rows
+    (zeroed block table) write the trash block harmlessly.
+
+    ``k_win``/``v_win``: (B, S, KV, D).
+    """
+    bs = k_pool.shape[1]
+    B, S = k_win.shape[:2]
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos), (B,))
+    pos = cp[:, None] + jnp.arange(S)[None, :]                # (B, S)
+    logical = pos % page_span if window > 0 else pos
+    bi = block_table[jnp.arange(B)[:, None], logical // bs]
+    off = logical % bs
+    return (k_pool.at[bi, off].set(k_win),
+            v_pool.at[bi, off].set(v_win))
 
 
 def paged_gather(pool: jnp.ndarray, block_table: jnp.ndarray,
@@ -255,7 +377,9 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                     block_table: Optional[jnp.ndarray] = None,
                     page_span: Optional[int] = None):
     """x: (B,S,D_model).  Training/prefill when ``cache`` is None or being
-    built; decode (S==1) when ``cache`` holds the K/V ring.
+    built; decode (S==1) when ``cache`` holds the K/V ring; speculative
+    verify (S>1 with a cache) teacher-forces an S-token window against
+    the cache and overwrites the window's positions (verify_attention).
 
     ``block_table``/``page_span``: block-paged decode — the cache leaves
     are the global block pool (NB+1, bs, KV, D) instead of per-row rings;
@@ -318,6 +442,35 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                                window=cfg.attention_window,
                                logit_softcap=cfg.attn_logit_softcap)
         new_cache = {"k": k_cache, "v": v_cache}
+    elif (cache is not None and cache_pos is not None
+            and block_table is not None):
+        # paged speculative verify (S > 1): attend each row's gathered
+        # pages PRE-write (positions >= cache_pos may hold draft-phase
+        # k=1 K/V that must not leak into full-k scores), then overwrite
+        # the window's positions with the full-k K/V.
+        kg = paged_gather(cache["k"], block_table, page_span)
+        vg = paged_gather(cache["v"], block_table, page_span)
+        out = verify_attention(q, k, v, kg, vg, cache_pos,
+                               window=cfg.attention_window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        k_pool, v_pool = paged_verify_write(
+            cache["k"], cache["v"], k, v, block_table, cache_pos,
+            page_span=page_span, window=cfg.attention_window)
+        new_cache = {"k": k_pool, "v": v_pool}
+    elif cache is not None and cache_pos is not None:
+        # slotted speculative verify (S > 1): same pre-write attention,
+        # then scatter the window's K/V at each row's own depth.
+        cp = jnp.broadcast_to(jnp.asarray(cache_pos), (B,))
+        out = verify_attention(q, k, v, cache["k"], cache["v"], cp,
+                               window=cfg.attention_window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        Sc = cache["k"].shape[1]
+        slots = cp[:, None] + jnp.arange(S)[None, :]
+        if cfg.attention_window > 0:
+            slots = slots % Sc
+        bidx = jnp.arange(B)[:, None]
+        new_cache = {"k": cache["k"].at[bidx, slots].set(k),
+                     "v": cache["v"].at[bidx, slots].set(v)}
     else:
         # backend dispatch (docs/kernels.md): the Pallas flash kernel when
         # selected and applicable; logit-softcap models fall back to the
@@ -353,3 +506,49 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
     out = lora_dense(out, p["wo"], lg.get("wo"), lora_scale,
                      kernels=cfg.kernels)
     return out, new_cache
+
+
+def apply_draft_attention(p: dict, cfg, x: jnp.ndarray,
+                          positions: jnp.ndarray, j: jnp.ndarray,
+                          win: dict, static_kv: dict, pos: jnp.ndarray,
+                          *, lora: Optional[dict] = None,
+                          lora_scale: float = 0.0):
+    """Attention sub-layer for one speculative-draft step (S == 1).
+
+    Identical projections/RoPE to :func:`apply_attention`, but the new
+    K/V are written into the small per-round window buffer ``win``
+    ((B,W,KV,D), at index ``j``) instead of the decode cache, and
+    attention runs via :func:`draft_attention` against the read-only
+    contiguous prefix ``static_kv`` — the draft scan therefore never
+    carries (or copies) the big cache.  Returns (out, updated win).
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    lg = lora or {}
+
+    q = lora_dense(x, p["wq"], lg.get("wq"), lora_scale, kernels=cfg.kernels)
+    k = lora_dense(x, p["wk"], lg.get("wk"), lora_scale, kernels=cfg.kernels)
+    v = lora_dense(x, p["wv"], lg.get("wv"), lora_scale, kernels=cfg.kernels)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.rms_eps)
+        k = rms_norm(p["k_norm"], k, cfg.rms_eps)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    k_win = jax.lax.dynamic_update_slice_in_dim(win["k"],
+                                                k.astype(win["k"].dtype),
+                                                j, axis=1)
+    v_win = jax.lax.dynamic_update_slice_in_dim(win["v"],
+                                                v.astype(win["v"].dtype),
+                                                j, axis=1)
+    out = draft_attention(q, k_win, v_win, static_kv["k"], static_kv["v"],
+                          pos, j, logit_softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    out = lora_dense(out, p["wo"], lg.get("wo"), lora_scale,
+                     kernels=cfg.kernels)
+    return out, {"k": k_win, "v": v_win}

@@ -452,9 +452,13 @@ def init_paged_cache(cfg, num_slots: int, num_blocks: int,
 def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                 num_groups=1, slot_mask=None, block_table=None,
                 page_span=None, no_drop=False, dispatch=None):
-    """One decode step.  tokens: (B,1) or (B,1,K); pos: scalar int, or a
+    """One decode step.  tokens: (B,S) or (B,S,K); pos: scalar int, or a
     (B,) vector of per-row positions — the serving engine's slotted decode,
     where every cache slot sits at a different depth (serving/engine.py).
+    ``S`` is normally 1; ``S > 1`` is the speculative verify step: the S
+    tokens are teacher-forced at positions ``pos .. pos+S-1`` against the
+    cache (attention-only models; attention.verify_attention) and logits
+    for every window position come back in one call.
     ``k`` follows :func:`repro.models.moe_layer.apply_moe`: an int, or a
     length-B tuple of per-slot expert budgets (FLAME's adaptive-k serving);
     ``slot_mask``: optional dynamic (B,) 0/1 vector masking rows (free
@@ -471,12 +475,13 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
     (:func:`repro.models.moe_layer.apply_moe`): ``dispatch`` is one of
     ``"capacity"``/``"dense"``/``"ragged"``; ``no_drop=True`` is the
     legacy spelling of ``dispatch="dense"``.
-    Returns (logits (B,1,V[,K]), new_cache)."""
+    Returns (logits (B,S,V[,K]), new_cache)."""
     dispatch = moe_mod.resolve_dispatch(dispatch, no_drop)
     x = embed_tokens(params, cfg, tokens)
-    B = x.shape[0]
+    B, S = x.shape[0], x.shape[1]
     pos = jnp.asarray(pos)
-    positions = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos)
+    base = pos[:, None] if pos.ndim == 1 else jnp.full((B, 1), pos)
+    positions = base + jnp.arange(S)[None, :]
     h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable, k=k,
                         cache=cache, cache_pos=pos, return_cache=True,
                         num_groups=num_groups, slot_mask=slot_mask,
@@ -484,6 +489,133 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                         dispatch=dispatch)
     h = rms_norm(params["final_norm"], h, cfg.rms_eps)
     return lm_head(params, cfg, h), ys["cache"]
+
+
+def draft_window(cfg, params, cache, tok0, pos, keys, *, sample_fn,
+                 window, trainable=None, k=None, block_table=None,
+                 page_span=None, dispatch=None):
+    """W sequential reduced-k decode steps fused into one graph, for the
+    speculative draft phase (serving/speculative.py) — WITHOUT touching
+    the KV cache.
+
+    The verify step overwrites the window's cache positions with full-k
+    K/V anyway, so the draft pass has no reason to write them: each
+    step's K/V go into a small per-layer window buffer ((B, W, KV, hd)
+    per period) carried through the scan, and attention reads the
+    existing cache READ-ONLY (attention.apply_draft_attention).  That
+    removes the whole-cache read-modify-write from every draft step —
+    the cache-carry machinery is most of a decode step's cost at small
+    batch — and for the paged layout the prefix pages are gathered into
+    a contiguous buffer ONCE, so the W steps also skip the per-step
+    block-table indirection.
+
+    tok0: (B,1) first window token per row; pos: (B,) window-start
+    positions (== each row's cache_pos); keys: (W,B,2) per-step sampling
+    keys; ``sample_fn(logits (B,V) fp32, keys_j (B,2)) -> (B,) int32``
+    picks each step's token in-graph.  ``k`` is the scalar draft budget
+    (every row drafts at the same cheap k — free rows ride along; with a
+    loss-free dispatch they cannot perturb real rows, and the rejection
+    rule is exact for ANY draft distribution regardless).
+
+    Attention-only models (SSM state cannot roll back) with a
+    non-wrapping cache (the serving engine guards both).
+    Returns (draft_logits (W,B,V) fp32, draft_tokens (W,B) int32).
+    """
+    P = cfg.pattern_period
+    if any(cfg.layer_kind(p) != "attn" for p in range(P)):
+        raise ValueError("draft_window requires attention-only models")
+    dispatch = moe_mod.resolve_dispatch(dispatch, False)
+    n_periods = cfg.num_layers // P
+    trainable = trainable or {}
+    lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
+    rescalers = trainable.get("rescaler") or {}
+    lora_scale = cfg.lora.scale if cfg.lora.enabled else 0.0
+    kk = k if k is not None else cfg.moe.top_k
+    W = window
+    pos = jnp.asarray(pos)
+    B = tok0.shape[0]
+    hd = cfg.head_dim_
+    dtype = jnp.dtype(cfg.dtype)
+
+    static = {}                 # read-only contiguous prefix per pos-group
+    win0 = {}                   # the window K/V buffers (scan carry)
+    for name, c in cache.items():
+        kv = c["attn"]
+        if block_table is not None:
+            static[name] = {
+                leaf: jax.vmap(lambda pool: attn_mod.paged_gather(
+                    pool, block_table, page_span))(kv[leaf])
+                for leaf in ("k", "v")}
+        else:
+            static[name] = {"k": kv["k"], "v": kv["v"]}
+        KV = kv["k"].shape[-2]
+        win0[name] = {
+            "k": jnp.zeros((n_periods, B, W, KV, hd), dtype),
+            "v": jnp.zeros((n_periods, B, W, KV, hd), dtype)}
+
+    xs_stack = {"params": params["blocks"], "static": static,
+                "idx": jnp.arange(n_periods)}
+    if lora_blocks:
+        xs_stack["lora"] = lora_blocks
+    if rescalers:
+        xs_stack["rescaler"] = rescalers
+
+    def one_step(tok, win, key_j, j):
+        x = embed_tokens(params, cfg, tok)               # (B,1,D)
+        positions = pos[:, None] + j                     # (B,1)
+
+        def body(carry, sl):
+            h, win_c = carry
+            i = sl["idx"]
+            win_slice = jax.tree.map(
+                lambda c_: jax.lax.dynamic_index_in_dim(c_, i, 0,
+                                                        keepdims=False),
+                win_c)
+            new_slices = {}
+            for lpos in range(P):
+                name = f"pos{lpos}"
+                pblk = sl["params"][name]
+                lg = sl.get("lora", {}).get(name) or {}
+                h1 = rms_norm(pblk["mixer_norm"], h, cfg.rms_eps)
+                h1, nw = attn_mod.apply_draft_attention(
+                    pblk["attn"], cfg, h1, positions, j,
+                    win_slice[name], sl["static"][name], pos,
+                    lora=lg.get("attn"), lora_scale=lora_scale)
+                new_slices[name] = nw
+                h = h + h1
+                if cfg.layer_is_moe(lpos):
+                    h2 = rms_norm(pblk["ffn_norm"], h, cfg.rms_eps)
+                    h2, _ = moe_mod.apply_moe(
+                        pblk["moe"], cfg, h2, k=kk,
+                        rescaler=sl.get("rescaler", {}).get(name),
+                        lora=lg.get("moe"), lora_scale=lora_scale,
+                        deterministic=True, dispatch=dispatch)
+                    h = h + h2
+                elif cfg.d_ff > 0:
+                    h2 = rms_norm(pblk["ffn_norm"], h, cfg.rms_eps)
+                    h2 = apply_ffn(pblk["ffn"], h2, lg.get("ffn"),
+                                   lora_scale, kernels=cfg.kernels)
+                    h = h + h2
+            win_c = jax.tree.map(
+                lambda c_, n: jax.lax.dynamic_update_index_in_dim(
+                    c_, n.astype(c_.dtype), i, 0), win_c, new_slices)
+            return (h, win_c), None
+
+        (h, win), _ = jax.lax.scan(body, (x, win), xs_stack)
+        h = rms_norm(params["final_norm"], h, cfg.rms_eps)
+        logits = lm_head(params, cfg, h)[:, 0].astype(jnp.float32)
+        nxt = sample_fn(logits, key_j).astype(tok0.dtype)
+        return logits, nxt, win
+
+    def outer(carry, xs_j):
+        tok, win = carry
+        key_j, j = xs_j
+        logits, nxt, win = one_step(tok, win, key_j, j)
+        return (nxt[:, None], win), (logits, nxt)
+
+    (_, _), (qs, toks) = jax.lax.scan(
+        outer, (tok0, win0), (keys, jnp.arange(W)))
+    return qs, toks
 
 
 def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,

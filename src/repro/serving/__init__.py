@@ -15,9 +15,16 @@ The subsystem has four layers (docs/architecture.md §Serving):
   **per-slot expert budget k** (FLAME's adaptive-k at serving time) and
   the rescaler applied per slot;
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival traces
-  (Poisson arrivals, length/tier mixes) and latency percentile helpers.
+  (Poisson arrivals, length/tier mixes) and latency percentile helpers;
+* :mod:`repro.serving.sampler`   — pure logits -> token sampling
+  (greedy / temperature / top-p) with explicit PRNG threading;
+* :mod:`repro.serving.speculative` — self-speculative decoding: draft at
+  k=1, verify in one full-k multi-token step, accept via the standard
+  rejection rule, roll rejected K/V back (``BlockPool.truncate_to``).
 """
 from .engine import ServingEngine, ServingReport  # noqa: F401
 from .kv_cache import BlockPool, SlotPool  # noqa: F401
+from .sampler import SamplerConfig  # noqa: F401
 from .scheduler import Completion, Request, Scheduler  # noqa: F401
+from .speculative import SpeculativeConfig  # noqa: F401
 from .workload import WorkloadConfig, make_trace, percentile  # noqa: F401

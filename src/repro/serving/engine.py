@@ -32,9 +32,16 @@ Engine loop (one ``step()``):
      sequences (budget reached / slot full) are evicted and their slots
      (and KV blocks) released.
 
-Sampling is greedy (argmax); a request may instead carry ``forced``
-continuation tokens, which the engine feeds back while accumulating their
-NLL — teacher-forced quality evaluation through the serving path.
+Sampling is greedy (argmax) by default, or any :class:`SamplerConfig`
+(temperature / top-p; serving/sampler.py) with per-request PRNG keys
+folded from ``seed`` and the request id, so a request's draws are
+independent of what shares its batch.  A request may instead carry
+``forced`` continuation tokens, which the engine feeds back while
+accumulating their NLL — teacher-forced quality evaluation through the
+serving path.  ``speculative=SpeculativeConfig(...)`` switches decode to
+self-speculative rounds: draft W tokens per slot at ``draft_k``, verify
+in one full-k multi-token step, accept by the rejection rule and roll
+rejected K/V back (serving/speculative.py).
 """
 from __future__ import annotations
 
@@ -49,7 +56,9 @@ import numpy as np
 
 from ..models import model as model_lib
 from .kv_cache import BlockPool, SlotPool
+from .sampler import SamplerConfig, sample_token
 from .scheduler import Completion, Request, Scheduler
+from .speculative import SpeculativeConfig, SpeculativeDecoder
 from .workload import percentile
 
 PyTree = Any
@@ -77,6 +86,10 @@ class _ActiveSlot:
     admitted: float
     first_token: float
     max_new: int
+    # per-request PRNG event counter: every sampler draw folds
+    # (seed, rid, events) into its key, so draws are keyed by the
+    # request's own draw order — independent of co-batched rows
+    events: int = 0
 
 
 @dataclass
@@ -88,6 +101,12 @@ class ServingReport:
     wall_s: float = 0.0
     num_slots: int = 0
     slot_k: Tuple[Optional[int], ...] = ()
+    # speculative-decode accounting (zero when speculation is off)
+    draft_step_s: List[float] = field(default_factory=list)
+    verify_step_s: List[float] = field(default_factory=list)
+    spec_rounds: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
 
     def tokens_by_rid(self) -> Dict[int, np.ndarray]:
         return {c.rid: c.tokens for c in self.completions}
@@ -97,7 +116,7 @@ class ServingReport:
         gen = sum(c.n_generated for c in self.completions)
         ttfts = [c.ttft for c in self.completions]
         lats = [c.latency for c in self.completions]
-        return {
+        out = {
             "n_requests": n,
             "gen_tokens": gen,
             "wall_s": self.wall_s,
@@ -112,6 +131,18 @@ class ServingReport:
             "decode_steps": len(self.decode_step_s),
             "truncated": sum(c.truncated for c in self.completions),
         }
+        if self.spec_rounds:
+            out.update({
+                "spec_rounds": self.spec_rounds,
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                "acceptance_rate": (self.spec_accepted
+                                    / max(self.spec_drafted, 1)),
+                "draft_step_ms_mean": float(np.mean(self.draft_step_s)) * 1e3,
+                "verify_step_ms_mean": (float(np.mean(self.verify_step_s))
+                                        * 1e3),
+            })
+        return out
 
 
 class ServingEngine:
@@ -166,7 +197,10 @@ class ServingEngine:
                  kv_layout: str = "paged", block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  no_drop: Optional[bool] = None,
-                 dispatch: Optional[str] = None):
+                 dispatch: Optional[str] = None,
+                 sampler: Optional[SamplerConfig] = None,
+                 speculative: Optional[SpeculativeConfig] = None,
+                 seed: int = 0):
         assert cfg.num_codebooks == 0, "serving engine: text models only"
         assert kv_layout in ("paged", "slotted"), kv_layout
         if dispatch is None:
@@ -222,35 +256,11 @@ class ServingEngine:
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
         self._last_tok = np.zeros((num_slots, 1), np.int32)
 
-        moe_k = self._moe_k
-        page_span = self.pool.attn_len if self.paged else None
         self.dispatch = dispatch
         self.no_drop = dispatch != "capacity"    # loss-free?
-
-        # the pool cache is donated: the engine replaces its reference with
-        # the returned cache every step, and donation lets XLA update the
-        # slot arrays in place instead of copying the whole pool per token.
-        # ``active``/``real`` masks free slots / prefill-bucket padding rows
-        # out of MoE routing (budget 0), so garbage rows can never consume
-        # expert capacity a real request needs.
-        if self.paged:
-            @partial(jax.jit, donate_argnums=(2,))
-            def _decode_fn(params, trainable, cache, tokens, pos, active,
-                           tables):
-                logits, new_cache = model_lib.decode_step(
-                    cfg, params, cache, tokens, pos, trainable=trainable,
-                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
-                    block_table=tables, page_span=page_span,
-                    dispatch=dispatch)
-                return logits[:, 0].astype(jnp.float32), new_cache
-        else:
-            @partial(jax.jit, donate_argnums=(2,))
-            def _decode_fn(params, trainable, cache, tokens, pos, active):
-                logits, new_cache = model_lib.decode_step(
-                    cfg, params, cache, tokens, pos, trainable=trainable,
-                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
-                    dispatch=dispatch)
-                return logits[:, 0].astype(jnp.float32), new_cache
+        self._sampler = sampler or SamplerConfig()
+        self._seed = seed
+        self._req_keys: Dict[int, jax.Array] = {}
 
         @partial(jax.jit, static_argnames=("k",))
         def _prefill_fn(params, trainable, prompts, real, k):
@@ -281,8 +291,71 @@ class ServingEngine:
                     slot_mask=real if cfg.moe.enabled else None)
             return logits[:, 0].astype(jnp.float32), cache
 
-        self._decode_fn = _decode_fn
+        self._decode_fn = self._build_decode_fn(self._moe_k)
         self._prefill_fn = _prefill_fn
+        self._spec = (SpeculativeDecoder(self, speculative)
+                      if speculative is not None else None)
+
+    # -------------------------------------------------------- compiled steps
+    def _build_decode_fn(self, moe_k: Optional[Tuple[int, ...]]):
+        """One jitted single-token decode step over the whole pool.
+
+        The pool cache is donated: the engine replaces its reference with
+        the returned cache every step, and donation lets XLA update the
+        slot arrays in place instead of copying the whole pool per token.
+        ``active`` masks free slots out of MoE routing (budget 0), so
+        garbage rows can never consume expert capacity a real request
+        needs.  ``moe_k`` is baked in — the speculative decoder compiles
+        its own fused draft window with every slot at ``draft_k``.
+        """
+        cfg, dispatch = self.cfg, self.dispatch
+        page_span = self.pool.attn_len if self.paged else None
+        if self.paged:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _decode_fn(params, trainable, cache, tokens, pos, active,
+                           tables):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    block_table=tables, page_span=page_span,
+                    dispatch=dispatch)
+                return logits[:, 0].astype(jnp.float32), new_cache
+        else:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _decode_fn(params, trainable, cache, tokens, pos, active):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    dispatch=dispatch)
+                return logits[:, 0].astype(jnp.float32), new_cache
+        return _decode_fn
+
+    def _build_verify_fn(self):
+        """The speculative verify step: full tier k over ``(B, W+1)``
+        teacher-forced window tokens, returning logits at EVERY window
+        position.  Shape-driven: one compile per distinct window width
+        (bounded by the speculative window, like the prefill buckets)."""
+        cfg, dispatch, moe_k = self.cfg, self.dispatch, self._moe_k
+        page_span = self.pool.attn_len if self.paged else None
+        if self.paged:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _verify_fn(params, trainable, cache, tokens, pos, active,
+                           tables):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    block_table=tables, page_span=page_span,
+                    dispatch=dispatch)
+                return logits.astype(jnp.float32), new_cache
+        else:
+            @partial(jax.jit, donate_argnums=(2,))
+            def _verify_fn(params, trainable, cache, tokens, pos, active):
+                logits, new_cache = model_lib.decode_step(
+                    cfg, params, cache, tokens, pos, trainable=trainable,
+                    k=moe_k, slot_mask=active if cfg.moe.enabled else None,
+                    dispatch=dispatch)
+                return logits.astype(jnp.float32), new_cache
+        return _verify_fn
 
     # ------------------------------------------------------------- trainables
     def _build_decode_trainable(self) -> Optional[PyTree]:
@@ -300,6 +373,21 @@ class ServingEngine:
             tr["rescaler"] = jax.tree.map(
                 lambda *leaves: jnp.stack(leaves, axis=-1),
                 *[self._rescaler_by_k[k] for k in ks])
+        return tr or None
+
+    def _build_draft_trainable(self, draft_k: int) -> Optional[PyTree]:
+        """Trainable tree for the speculative draft window: every slot at
+        the same scalar ``draft_k``, so the per-period rescaler tree is
+        used as-is (no per-slot stacking).  Uses the ``draft_k`` tier's
+        trained rescaler when one was provided; otherwise the draft runs
+        unrescaled — the draft distribution q may be anything without
+        breaking the rejection rule's exactness, only the acceptance
+        rate."""
+        tr: dict = {}
+        if self._lora is not None:
+            tr["lora"] = self._lora
+        if self._rescaler_by_k and draft_k in self._rescaler_by_k:
+            tr["rescaler"] = self._rescaler_by_k[draft_k]
         return tr or None
 
     def _prefill_trainable(self, k: Optional[int]) -> Optional[PyTree]:
@@ -409,24 +497,51 @@ class ServingEngine:
 
             for j, (req, slot) in enumerate(items):
                 max_new = self._max_new(req)
-                tok, nll = self._pick(logits_np[j], req, 0)
-                self._active[slot] = _ActiveSlot(
-                    req=req, tokens=[tok], nll=nll, admitted=admitted,
+                a = _ActiveSlot(
+                    req=req, tokens=[], nll=0.0, admitted=admitted,
                     first_token=tft, max_new=max_new)
+                self._active[slot] = a
+                tok, nll = self._pick(logits_np[j], a)
+                a.tokens.append(tok)
+                a.nll += nll
                 self._last_tok[slot, 0] = tok
-                if len(self._active[slot].tokens) >= max_new \
-                        or self.pool.slot_full(slot):
+                if len(a.tokens) >= max_new or self.pool.slot_full(slot):
                     self._finish(slot, report)
         return len(assignments)
 
-    def _pick(self, logits_row: np.ndarray, req: Request,
-              idx: int) -> Tuple[int, float]:
-        """Next token for one slot: greedy argmax, or the request's forced
-        token (accumulating its NLL)."""
-        if req.forced is not None:
-            tok = int(req.forced[idx])
+    # --------------------------------------------------------------- sampling
+    def _req_key(self, rid: int) -> jax.Array:
+        """The request's PRNG base key, fold_in(seed key, rid), memoized —
+        every draw key folds an event counter into this."""
+        key = self._req_keys.get(rid)
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self._seed), rid)
+            self._req_keys[rid] = key
+        return key
+
+    def _event_key(self, a: _ActiveSlot) -> jax.Array:
+        """Next PRNG key for one request: fold (seed, rid, event counter).
+        Keys depend only on the request's own draw order, so sampled
+        output is independent of what shares the batch."""
+        key = jax.random.fold_in(self._req_key(a.req.rid), a.events)
+        a.events += 1
+        return key
+
+    def _sample(self, logits_row: np.ndarray, a: _ActiveSlot) -> int:
+        """One sampler draw for one slot (no forced/NLL handling)."""
+        if self._sampler.kind == "greedy":
+            return int(np.argmax(logits_row))
+        return int(sample_token(self._event_key(a), jnp.asarray(logits_row),
+                                self._sampler))
+
+    def _pick(self, logits_row: np.ndarray,
+              a: _ActiveSlot) -> Tuple[int, float]:
+        """Next token for one slot: the engine's sampler, or the request's
+        forced token (accumulating its NLL)."""
+        if a.req.forced is not None:
+            tok = int(a.req.forced[len(a.tokens)])
             return tok, float(-_log_softmax_np(logits_row)[tok])
-        return int(np.argmax(logits_row)), 0.0
+        return self._sample(logits_row, a), 0.0
 
     # ----------------------------------------------------------------- decode
     def _decode_once(self, report: ServingReport) -> None:
@@ -451,7 +566,7 @@ class ServingEngine:
         self.pool.advance(active)
         for slot in active:
             a = self._active[slot]
-            tok, nll = self._pick(logits_np[slot], a.req, len(a.tokens))
+            tok, nll = self._pick(logits_np[slot], a)
             a.tokens.append(tok)
             a.nll += nll
             self._last_tok[slot, 0] = tok
@@ -500,6 +615,13 @@ class ServingEngine:
             raise ValueError(
                 f"requests {too_long}: prompt leaves no room for a "
                 f"generated token in a {self.slot_len}-token slot")
+        if self._spec is not None:
+            forced = [r.rid for r in requests if r.forced is not None]
+            if forced:
+                raise ValueError(
+                    f"requests {forced}: teacher-forced (NLL) requests "
+                    "cannot run under speculative decoding — the drafts "
+                    "would diverge from the forced continuation")
         # (no block-capacity fail-fast needed: blocks_needed caps at the
         # per-request span and the pool holds >= one span by construction,
         # so an empty pool can always admit any slot-length-valid request)
@@ -514,7 +636,10 @@ class ServingEngine:
                 self.scheduler.add(pending.pop(0))
             admitted = self._admit(report)
             if self.n_active:
-                self._decode_once(report)
+                if self._spec is not None:
+                    self._spec.round(report)
+                else:
+                    self._decode_once(report)
                 steps += 1
                 if max_steps is not None and steps >= max_steps:
                     break

@@ -102,6 +102,27 @@ class _RowPool:
         """One token decoded in each of ``slots``."""
         self.cache_pos[np.asarray(list(slots), np.int32)] += 1
 
+    def truncate_to(self, slot: int, n_tokens: int) -> None:
+        """Roll a live row back to ``n_tokens`` written positions — the
+        speculative-decode rollback: positions ``>= n_tokens`` (a rejected
+        draft suffix) become dead and the next decode write lands at
+        ``n_tokens``.  Never grows a row.  Requires an unwrapped cache
+        (a wrapped ring has aliased positions; rollback is ill-defined)."""
+        if slot in self._free:
+            raise ValueError(
+                f"{type(self).__name__}.truncate_to({slot}): slot is free")
+        held = int(self.cache_pos[slot])
+        if self.cfg.attention_window > 0 and held > self.attn_len:
+            raise ValueError(
+                f"{type(self).__name__}.truncate_to({slot}): ring cache "
+                f"has wrapped ({held} > {self.attn_len} positions); "
+                f"rollback is ill-defined")
+        if not 0 <= n_tokens <= held:
+            raise ValueError(
+                f"{type(self).__name__}.truncate_to({slot}, {n_tokens}): "
+                f"row holds only {held} positions")
+        self.cache_pos[slot] = n_tokens
+
     def slot_full(self, slot: int) -> bool:
         """No room left to write the next decode token (linear cache);
         ring (sliding-window) caches never fill."""
@@ -245,6 +266,21 @@ class BlockPool(_RowPool):
                 else min(p, self.attn_len - 1)
             while self._nalloc[s] <= logical // self.block_size:
                 self._alloc_block(s)
+
+    def truncate_to(self, slot: int, n_tokens: int) -> None:
+        """Speculative rollback: drop the row's positions ``>= n_tokens``
+        and return the tail blocks past the kept span to the free list.
+        The reservation stays booked — the request's lifetime projection
+        is unchanged, so re-allocating the freed tail during later decode
+        (prepare_decode) can never fail."""
+        super().truncate_to(slot, n_tokens)            # guards + cache_pos
+        keep = -(-min(n_tokens, self.attn_len) // self.block_size)
+        n = int(self._nalloc[slot])
+        if keep < n:
+            self._free_blocks.extend(
+                int(b) for b in self.block_table[slot, keep:n])
+            self.block_table[slot, keep:n] = 0
+            self._nalloc[slot] = keep
 
     def release(self, slot: int) -> None:
         n = int(self._nalloc[slot])

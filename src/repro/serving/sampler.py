@@ -1,0 +1,92 @@
+"""Pure logits -> token sampling for the serving engine.
+
+Every function here is a pure ``jnp`` map from (PRNG key, logits) to a
+token — no host state, no implicit RNG — so samplers compose with
+``jax.vmap`` across slots and with the speculative verify step, which
+needs the *distribution* (:func:`sampler_probs`) and not just a draw.
+
+``SamplerConfig`` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` as a static argument.  Three kinds:
+
+* ``greedy`` — argmax, expressed as a one-hot distribution so the
+  speculative rejection rule degenerates to exact-match acceptance;
+* ``temperature`` — softmax of ``logits / temperature``;
+* ``top_p`` — nucleus sampling: temperature softmax, then the smallest
+  prefix of probability-sorted tokens whose mass reaches ``top_p`` is
+  kept and renormalised (ties broken by stable sort, so the nucleus is
+  deterministic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("greedy", "temperature", "top_p")
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"sampler kind {self.kind!r} not in {KINDS}")
+        if self.kind != "greedy" and not self.temperature > 0.0:
+            raise ValueError(
+                f"temperature must be > 0, got {self.temperature} "
+                "(temperature -> 0 converges to greedy; use kind='greedy')")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+def sampler_probs(logits: jnp.ndarray, sc: SamplerConfig) -> jnp.ndarray:
+    """logits (..., V) -> the sampler's token distribution (..., V), fp32.
+
+    This is the single source of truth shared by plain sampling and the
+    speculative rejection rule (speculative.verify_window), which needs
+    draft/target probabilities under the SAME sampler transform for its
+    exactness contract to hold.
+    """
+    logits = logits.astype(jnp.float32)
+    if sc.kind == "greedy":
+        # one-hot at argmax (first max wins, matching np.argmax): the
+        # rejection rule then accepts iff draft argmax == target argmax
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1),
+                              logits.shape[-1], dtype=jnp.float32)
+    probs = jax.nn.softmax(logits / sc.temperature, axis=-1)
+    if sc.kind == "temperature" or sc.top_p >= 1.0:
+        return probs
+    # nucleus: keep a sorted token iff the mass strictly before it is
+    # < top_p — the smallest prefix whose cumulative mass reaches top_p
+    # (the crossing token included)
+    order = jnp.argsort(-probs, axis=-1)
+    ps = jnp.take_along_axis(probs, order, axis=-1)
+    before = jnp.cumsum(ps, axis=-1) - ps
+    ps = jnp.where(before < sc.top_p, ps, 0.0)
+    ps = ps / ps.sum(axis=-1, keepdims=True)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(ps, inv, axis=-1)
+
+
+def sample_from_probs(key: jax.Array, probs: jnp.ndarray) -> jnp.ndarray:
+    """One categorical draw per leading-batch row of ``probs`` (..., V).
+
+    Zero-probability tokens map to ``-inf`` logits and can never be
+    drawn, so a one-hot distribution samples its argmax deterministically
+    regardless of the key (the greedy degenerate case).
+    """
+    return jax.random.categorical(key, jnp.log(probs), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("sc",))
+def sample_token(key: jax.Array, logits: jnp.ndarray,
+                 sc: SamplerConfig) -> jnp.ndarray:
+    """Draw one token from ``sampler_probs(logits, sc)``.  logits (..., V)."""
+    if sc.kind == "greedy":
+        return jnp.argmax(logits, axis=-1)
+    return sample_from_probs(key, sampler_probs(logits, sc))

@@ -369,6 +369,46 @@ def test_block_pool_misuse_raises():
     assert pool.available_blocks == pool.num_blocks
 
 
+def test_block_pool_truncate_to_guards_and_frees_tail():
+    """The speculative-rollback primitive's negative paths: rolling back
+    a free slot or past a row's written length must raise, and a legal
+    rollback must return exactly the dead tail blocks to the free list
+    while keeping the admission-time reservation booked (regrowth over
+    the freed span can never fail)."""
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4)
+    with pytest.raises(ValueError, match="slot is free"):
+        pool.truncate_to(0, 0)                       # rollback a free row
+    s = pool.allocate()
+    pool.reserve(s, 16)                              # 4 blocks booked
+    pool.alloc_prompt(s, 6)
+    pool.cache_pos[s] = 6
+    for _ in range(6):                               # decode up to 12 held
+        pool.prepare_decode([s])
+        pool.advance([s])
+    assert int(pool._nalloc[s]) == 3
+    with pytest.raises(ValueError, match="holds only"):
+        pool.truncate_to(s, 13)                      # past cache_pos
+    with pytest.raises(ValueError, match="holds only"):
+        pool.truncate_to(s, -1)
+    assert int(pool.cache_pos[s]) == 12              # failed ops: no change
+    free_before = sorted(pool._free_blocks)
+    tail = [int(b) for b in pool.block_table[s, 1:3]]
+    pool.truncate_to(s, 2)                           # keep only block 0
+    assert int(pool.cache_pos[s]) == 2
+    assert int(pool._nalloc[s]) == 1
+    assert sorted(pool._free_blocks) == sorted(free_before + tail)
+    assert (pool.block_table[s, 1:] == 0).all()      # dead entries zeroed
+    assert pool.reserved_for(s) == 4                 # reservation survives
+    pool.check_invariants()
+    for _ in range(10):                              # regrow over the span
+        pool.prepare_decode([s])
+        pool.advance([s])
+    assert int(pool.cache_pos[s]) == 12
+    pool.check_invariants()
+    pool.release(s)
+    assert pool.available_blocks == pool.num_blocks
+
+
 # ==========================================================================
 # property: arbitrary allocate/extend/free interleavings keep the
 # free lists intact (hypothesis in CI, seeded sweep everywhere)

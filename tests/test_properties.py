@@ -116,3 +116,64 @@ def test_flame_weights_interpolate_clients(freqs_a, t):
     got = np.asarray(out["blocks"]["pos0"]["moe"]["experts"]["w1"]["a"])
     lo, hi = np.minimum(a0, a1), np.maximum(a0, a1)
     assert (got <= hi + 1e-4).all() and (got >= lo - 1e-4).all()
+
+
+# --------------------------------------------------------------------------
+# serving samplers (serving/sampler.py): the distributions behind both
+# plain sampling and the speculative rejection rule
+# --------------------------------------------------------------------------
+
+_logit_rows = st.lists(
+    st.floats(-30.0, 30.0, allow_nan=False, allow_infinity=False,
+              width=32),
+    min_size=2, max_size=16)
+
+
+@given(_logit_rows, st.floats(0.05, 3.0), st.floats(0.05, 0.999))
+def test_top_p_never_samples_outside_nucleus(row, temp, top_p):
+    """Nucleus support = the smallest prefix of probability-sorted tokens
+    reaching ``top_p`` mass: every zero-probability token stays zero, the
+    crossing token is included, and mass strictly before any kept token
+    is < top_p."""
+    from repro.serving.sampler import SamplerConfig, sampler_probs
+    logits = jnp.asarray(row, jnp.float32)
+    sc = SamplerConfig(kind="top_p", temperature=temp, top_p=top_p)
+    probs = np.asarray(sampler_probs(logits, sc), np.float64)
+    base = np.asarray(jax.nn.softmax(logits / temp), np.float64)
+    order = np.argsort(-base, kind="stable")
+    before = np.cumsum(base[order]) - base[order]
+    keep = np.zeros(len(row), bool)
+    keep[order[before < top_p]] = True
+    assert keep.any()                               # argmax always kept
+    assert (probs[~keep] == 0.0).all()              # outside nucleus: never
+    assert (probs[keep] > 0.0).all()                # inside: always possible
+    np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+
+
+@given(_logit_rows, st.sampled_from(["temperature", "top_p"]),
+       st.floats(0.05, 3.0), st.floats(0.05, 1.0))
+def test_sampler_probs_are_distributions(row, kind, temp, top_p):
+    from repro.serving.sampler import SamplerConfig, sampler_probs
+    sc = SamplerConfig(kind=kind, temperature=temp, top_p=top_p)
+    probs = np.asarray(sampler_probs(jnp.asarray(row, jnp.float32), sc))
+    assert (probs >= 0.0).all()
+    np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+    assert np.isfinite(probs).all()
+
+
+@given(_logit_rows)
+def test_temperature_to_zero_converges_to_greedy(row):
+    """As T -> 0 the temperature distribution concentrates on the
+    near-argmax set; with a decisive gap it IS the greedy one-hot."""
+    from repro.serving.sampler import SamplerConfig, sampler_probs
+    logits = jnp.asarray(row, jnp.float32)
+    row32 = np.asarray(row, np.float32)
+    cold = np.asarray(sampler_probs(
+        logits, SamplerConfig(kind="temperature", temperature=1e-5)),
+        np.float64)
+    near = row32 >= row32.max() - 1e-3
+    assert cold[near].sum() > 1.0 - 1e-6
+    if near.sum() == 1:                    # decisive max: exact one-hot
+        greedy = np.asarray(sampler_probs(
+            logits, SamplerConfig(kind="greedy")))
+        np.testing.assert_allclose(cold, greedy, atol=1e-6)

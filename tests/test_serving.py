@@ -114,6 +114,30 @@ def test_engine_forced_mode_accumulates_nll():
     assert comp.nll_sum > 0.0 and np.isfinite(comp.nll_sum)
 
 
+def test_engine_forced_nll_deterministic_across_fresh_engines():
+    """Teacher-forced NLL is an evaluation primitive: two freshly built
+    engines fed the same seeded trace must agree bit for bit (no hidden
+    state — pool history, compile order, RNG — may leak into the sum)."""
+    rng = np.random.default_rng(1234)
+    prompts = [rng.integers(0, CFG.vocab_size, (L,)).astype(np.int32)
+               for L in (4, 8, 6)]
+    forced = [rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+              for n in (5, 3, 4)]
+
+    def run_once():
+        eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                            slot_k=(2, 2), seed=7)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=len(f), forced=f)
+                for i, (p, f) in enumerate(zip(prompts, forced))]
+        return {c.rid: c.nll_sum for c in eng.run(reqs).completions}
+
+    a, b = run_once(), run_once()
+    assert set(a) == {0, 1, 2}
+    for rid in a:
+        assert a[rid] == b[rid]                     # bit-identical
+        assert np.isfinite(a[rid]) and a[rid] > 0.0
+
+
 def test_moe_slot_mask_rows_cannot_steal_capacity():
     """Masked (free-slot / pad) rows must not occupy expert-queue
     positions: the unmasked rows' outputs equal running those rows alone."""

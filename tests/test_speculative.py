@@ -1,0 +1,315 @@
+"""Speculative decoding: exactness, distribution, and rollback proofs.
+
+Three layers of evidence (ISSUE 6 headline suite):
+
+* **greedy parity** — self-speculative greedy decode is token-for-token
+  identical to the plain full-k decode oracle (naive_decode), across
+  both kernel backends x paged/slotted KV layouts x mixed-tier traces.
+  Every draft mismatch exercises the KV rollback path end to end.
+* **statistical** — a seeded >= 10k-draw harness on a tiny vocab proving
+  the rejection rule emits tokens with EXACTLY the target sampler's
+  distribution (TV distance + chi-square against the analytic p), for
+  temperature and top-p samplers, at every window position class
+  (first token, mid-window conditional, all-accept bonus).  Marked
+  ``slow`` (CI smoke job / ``make test-slow``).
+* **rollback property** — arbitrary accept/reject prefixes leave the
+  ``BlockPool`` (tables, allocation counts, free list) exactly as a
+  straight decode of the accepted prefix would, bystander slots
+  untouched; hypothesis-driven when available, seeded sweep otherwise.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from repro.configs.base import KernelConfig
+from repro.models import model as M
+from repro.serving import (BlockPool, Request, SamplerConfig, ServingEngine,
+                           SpeculativeConfig)
+from repro.serving.sampler import sample_from_probs, sampler_probs
+from repro.serving.speculative import verify_window
+
+from test_serving import naive_decode
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+CFG = tiny_moe()
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+RNG = np.random.default_rng(0)
+FULL_K = CFG.moe.num_experts
+
+
+# ==========================================================================
+# greedy parity: spec decode == plain full-k decode, token for token
+# ==========================================================================
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("layout", ["slotted", "paged"])
+def test_greedy_spec_matches_plain_decode(backend, layout):
+    """Mixed-tier trace: premium slots verify at k=4, constrained at k=2,
+    both drafting at k=1.  The spec engine must reproduce the naive
+    full-batch greedy loop of each tier exactly — the greedy rejection
+    rule accepts iff draft argmax == target argmax, so every mismatch
+    also exercises truncate_to/rollback on this layout."""
+    cfg = CFG.replace(kernels=KernelConfig(backend=backend))
+    new = 10
+    prompts = RNG.integers(0, cfg.vocab_size, (8, 6)).astype(np.int32)
+    ref = {4: naive_decode(cfg, PARAMS, prompts[:4], new, 4),
+           2: naive_decode(cfg, PARAMS, prompts[4:], new, 2)}
+    eng = ServingEngine(cfg, PARAMS, num_slots=4, slot_len=6 + new,
+                        slot_k=(4, 4, 2, 2), kv_layout=layout,
+                        speculative=SpeculativeConfig(window=3, draft_k=1))
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=new,
+                    k=4 if i < 4 else 2) for i in range(8)]
+    rep = eng.run(reqs)
+    got = rep.tokens_by_rid()
+    for i in range(8):
+        tier, row = (4, i) if i < 4 else (2, i - 4)
+        np.testing.assert_array_equal(
+            got[i], ref[tier][row],
+            err_msg=f"rid {i} (tier {tier}) diverged from plain decode")
+    s = rep.summary()
+    assert s["spec_rounds"] > 0 and s["spec_drafted"] > 0
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+
+
+def test_spec_sampled_reproducible_and_layout_independent():
+    """Sampled speculative decode is a deterministic function of
+    (seed, rid, draw order): re-running the same trace reproduces the
+    same tokens, and the KV layout (paged vs slotted) cannot change
+    them — the per-request event-counter keys make draws independent of
+    engine internals."""
+    sc = SamplerConfig(kind="temperature", temperature=1.2)
+    prompts = RNG.integers(0, CFG.vocab_size, (6, 5)).astype(np.int32)
+    outs = {}
+    for layout in ("slotted", "paged"):
+        for rep in range(2):
+            eng = ServingEngine(
+                CFG, PARAMS, num_slots=3, slot_len=5 + 8,
+                kv_layout=layout, sampler=sc, seed=11,
+                speculative=SpeculativeConfig(window=2, draft_k=1))
+            reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=8)
+                    for i in range(6)]
+            outs[layout, rep] = eng.run(reqs).tokens_by_rid()
+    for layout in ("slotted", "paged"):
+        for i in range(6):
+            np.testing.assert_array_equal(outs[layout, 0][i],
+                                          outs[layout, 1][i])
+    for i in range(6):
+        np.testing.assert_array_equal(outs["slotted", 0][i],
+                                      outs["paged", 0][i])
+
+
+# ==========================================================================
+# guards: configurations that would silently break exactness must raise
+# ==========================================================================
+
+def test_spec_guards():
+    spec = SpeculativeConfig(window=2, draft_k=1)
+    with pytest.raises(ValueError, match="window"):
+        SpeculativeConfig(window=0)
+    with pytest.raises(ValueError, match="draft_k"):
+        SpeculativeConfig(draft_k=0)
+    with pytest.raises(ValueError, match="draft_k"):
+        ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                      speculative=SpeculativeConfig(draft_k=99))
+    with pytest.raises(ValueError, match="no cheaper draft"):
+        cfg_d = tiny_dense()
+        ServingEngine(cfg_d, M.init_params(jax.random.PRNGKey(0), cfg_d),
+                      num_slots=2, slot_len=16, speculative=spec)
+    with pytest.raises(ValueError, match="loss-free"):
+        ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                      dispatch="capacity", speculative=spec)
+    with pytest.raises(ValueError, match="non-wrapping"):
+        ServingEngine(CFG.replace(attention_window=4), PARAMS,
+                      num_slots=2, slot_len=16, speculative=spec)
+    # teacher-forced requests cannot run under speculation: fail fast
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                        speculative=spec)
+    bad = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+                  forced=np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="teacher-forced"):
+        eng.run([bad])
+
+
+# ==========================================================================
+# statistical harness: the rejection rule's output IS the target
+# distribution (>= 10k draws, tiny vocab; CI smoke / make test-slow)
+# ==========================================================================
+
+def _tv(hist, p):
+    return 0.5 * float(np.abs(hist - p).sum())
+
+
+def _chi2(counts, p, n):
+    sup = p > 1e-12
+    return float((((counts - n * p) ** 2)[sup] / (n * p)[sup]).sum()), \
+        int(sup.sum()) - 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sc", [
+    SamplerConfig(kind="temperature", temperature=1.3),
+    SamplerConfig(kind="top_p", temperature=0.9, top_p=0.7),
+], ids=["temperature", "top_p"])
+def test_verify_window_emits_target_distribution(sc):
+    """Fabricated context-free draft/target logits, 20k independent
+    windows: at every emission class the output must match the analytic
+    target distribution ``sampler_probs(p)`` —
+
+    * the FIRST emitted token (accept-or-resample at position 0);
+    * the token at position 1, among windows that reach it;
+    * the BONUS token, among all-accept windows (drawn fresh from p_W).
+
+    Seeds are fixed, so the chi-square / TV bounds are deterministic."""
+    V, W, N = 8, 3, 20000
+    rng = np.random.default_rng(5)
+    p_logits = jax.numpy.asarray(rng.normal(size=(W + 1, V)) * 1.5)
+    # draft close to target (acceptance high enough that all-accept
+    # windows are plentiful) but not equal (rejections still exercised)
+    q_logits = p_logits[:W] + jax.numpy.asarray(
+        rng.normal(size=(W, V)) * 0.5)
+    p = np.asarray(sampler_probs(p_logits, sc))            # (W+1, V)
+
+    dkeys = jax.random.split(jax.random.PRNGKey(7), N * W).reshape(N, W, 2)
+    drafts = jax.vmap(
+        lambda ks: jax.vmap(sample_from_probs)(ks, sampler_probs(q_logits,
+                                                                 sc))
+    )(dkeys)
+    keys = jax.random.split(jax.random.PRNGKey(42), N)
+    out, n_emit, n_acc = jax.vmap(
+        lambda k, d: verify_window(k, d, q_logits, p_logits, sc)
+    )(keys, drafts)
+    out, n_emit, n_acc = (np.asarray(out), np.asarray(n_emit),
+                          np.asarray(n_acc))
+
+    checks = [("first token", out[:, 0], p[0]),
+              ("position 1", out[n_emit >= 2, 1], p[1]),
+              ("bonus token", out[n_acc == W, W], p[W])]
+    for name, toks, target in checks:
+        n = len(toks)
+        assert n >= 2000, f"{name}: only {n} samples (acceptance too low?)"
+        counts = np.bincount(toks, minlength=V).astype(np.float64)
+        # nothing outside the sampler's support, ever
+        assert counts[target <= 1e-12].sum() == 0, \
+            f"{name}: emitted a token outside the target support"
+        hist = counts / n
+        tv = _tv(hist, target)
+        chi2, df = _chi2(counts, target, n)
+        assert tv < 3.0 * np.sqrt(V / n), (name, tv, n)
+        # H0 mean df, sd sqrt(2 df); ~6 sigma headroom, deterministic
+        assert chi2 < df + 6.0 * np.sqrt(2.0 * df), (name, chi2, df)
+
+
+@pytest.mark.slow
+def test_engine_spec_sampling_matches_plain_distribution():
+    """End-to-end two-sample check through the real engine: serve the
+    same 2048-request trace (one shared prompt) with and without
+    speculation under a temperature sampler; each request's draws are
+    keyed by its rid, so requests are i.i.d. samples of the model's
+    sampling process.  The marginal histogram of the first
+    post-prefill token (the first speculatively-emitted position) must
+    agree between the two engines."""
+    cfg = tiny_moe(vocab_size=8)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    sc = SamplerConfig(kind="temperature", temperature=1.1)
+    prompt = np.asarray([3, 1], np.int32)
+    n = 2048
+    reqs = lambda: [Request(rid=i, prompt=prompt, max_new_tokens=3)
+                    for i in range(n)]
+
+    def first_post_prefill(spec):
+        eng = ServingEngine(cfg, params, num_slots=8, slot_len=2 + 3,
+                            sampler=sc, seed=5, speculative=spec)
+        rep = eng.run(reqs())
+        toks = rep.tokens_by_rid()
+        return np.asarray([toks[i][1] for i in range(n)])
+
+    plain = first_post_prefill(None)
+    spec = first_post_prefill(SpeculativeConfig(window=2, draft_k=1))
+    hp = np.bincount(plain, minlength=8) / n
+    hs = np.bincount(spec, minlength=8) / n
+    assert _tv(hs, hp) < 2.0 * np.sqrt(2.0) * np.sqrt(8 / n)
+
+
+# ==========================================================================
+# rollback property: truncate_to leaves the pool exactly as a straight
+# decode of the accepted prefix would
+# ==========================================================================
+
+def _pool_pair(block_size):
+    mk = lambda: BlockPool(CFG, num_slots=3, slot_len=24,
+                           block_size=block_size)
+    return mk(), mk()
+
+
+def _rollback_vs_straight(n_prefill, W, acc, block_size):
+    """Pool A runs a speculative round (W draft advances + verify block +
+    rollback); pool B straight-decodes the accepted prefix.  Their entire
+    bookkeeping state must be indistinguishable, including an untouched
+    bystander slot."""
+    pool_a, pool_b = _pool_pair(block_size)
+    states = []
+    for pool, kind in ((pool_a, "spec"), (pool_b, "straight")):
+        by = pool.allocate()                       # bystander
+        pool.reserve(by, 8)
+        pool.alloc_prompt(by, 5)
+        pool.cache_pos[by] = 5
+        s = pool.allocate()
+        pool.reserve(s, n_prefill + W + 2)
+        pool.alloc_prompt(s, n_prefill)
+        pool.cache_pos[s] = n_prefill
+        bystander_row = pool.block_table[by].copy()
+        if kind == "spec":
+            for _ in range(W):                     # draft window
+                pool.prepare_decode([s])
+                pool.advance([s])
+            pool.prepare_decode([s])               # verify position
+            if acc == W:
+                pool.advance([s])
+            else:
+                pool.truncate_to(s, n_prefill + acc + 1)
+        else:                                      # accepted prefix only
+            for _ in range(acc + 1):
+                pool.prepare_decode([s])
+                pool.advance([s])
+        pool.check_invariants()
+        assert (pool.block_table[by] == bystander_row).all()
+        states.append((pool, s))
+    (pa, sa), (pb, sb) = states
+    assert pa.cache_pos[sa] == pb.cache_pos[sb] == n_prefill + acc + 1
+    assert pa._nalloc[sa] == pb._nalloc[sb]
+    np.testing.assert_array_equal(pa.block_table[sa], pb.block_table[sb])
+    assert sorted(pa._free_blocks) == sorted(pb._free_blocks)
+    assert pa.blocks_in_use == pb.blocks_in_use
+    # rollback is repeatable from here: both pools grow a fresh block.
+    # WHICH free block the pool hands out is an implementation detail
+    # (truncate_to appends freed blocks to the free list, so the ids can
+    # differ) — the shared prefix and the allocation count must not.
+    pa.prepare_decode([sa]), pb.prepare_decode([sb])
+    assert pa._nalloc[sa] == pb._nalloc[sb]
+    np.testing.assert_array_equal(pa.block_table[sa][:pa._nalloc[sa] - 1],
+                                  pb.block_table[sb][:pb._nalloc[sb] - 1])
+    pa.check_invariants(), pb.check_invariants()
+
+
+_ROLLBACK_CASES = [(n, w, a, bs)
+                   for n in (1, 3, 8) for w in (1, 2, 4)
+                   for a in range(w + 1) for bs in (1, 4)]
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None, derandomize=True)
+    @given(n_prefill=st.integers(1, 10), W=st.integers(1, 4),
+           acc_frac=st.floats(0.0, 1.0), block_size=st.sampled_from([1, 2, 4]))
+    def test_rollback_matches_straight_decode(n_prefill, W, acc_frac,
+                                              block_size):
+        _rollback_vs_straight(n_prefill, W, int(acc_frac * W), block_size)
+else:                                              # pragma: no cover
+    @pytest.mark.parametrize("n_prefill,W,acc,block_size", _ROLLBACK_CASES)
+    def test_rollback_matches_straight_decode(n_prefill, W, acc,
+                                              block_size):
+        _rollback_vs_straight(n_prefill, W, acc, block_size)
