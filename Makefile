@@ -17,7 +17,8 @@ coverage:
 	$(PYTHON) -m pytest -q --cov=repro --cov-report=xml --cov-report=term
 	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 \
 		repro/kernels repro/serving \
-		repro/serving/sampler.py repro/serving/speculative.py
+		repro/serving/sampler.py repro/serving/speculative.py \
+		repro/serving/kv_cache.py repro/serving/scheduler.py
 
 # the long-running randomized stress subset (CI runs it in the smoke job)
 test-slow:
@@ -40,9 +41,12 @@ bench-serve:
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --smoke --out bench-smoke.json
 
-# README/docs must only reference modules & functions that exist
+# README/docs must only reference modules & functions that exist; the
+# serving ops guide's launcher flags are checked against the real parser
 docs-check:
-	$(PYTHON) tools/docs_check.py README.md docs/architecture.md docs/kernels.md
+	$(PYTHON) tools/docs_check.py README.md docs/architecture.md \
+		docs/kernels.md docs/serving.md \
+		--flags docs/serving.md=repro.launch.serve:build_parser
 
 # every PR must commit its CHANGES.md entry (CI runs --base origin/main)
 changes-check:

@@ -410,6 +410,134 @@ def run(smoke: bool = False) -> None:
           f"{fl['acceptance']:.2f} — speculation pays exactly when the "
           f"cheap budget agrees with the full one")
 
+    # ---- 5. overload: prefix cache + SLO admission + preemption ----
+    # A flash-crowd trace: long heavy-tail economy generations saturate
+    # the block pool (4 economy slots x 10 reserved blocks > 32-block
+    # pool), then a burst of short premium turns lands 150 ms later.
+    # Every prompt starts with one of two 16-token system prefixes (2
+    # full 8-token blocks).  Three engines measure the SAME trace: cold
+    # (PR 4/5 behaviour), prefix (block sharing only), traffic (sharing
+    # + EDF admission on per-tier TTFT targets + decode preemption).
+    # The structural claim is the KV one — shared prefixes pull peak KV
+    # bytes below cold at equal traffic — while per-tier p50/p99 TTFT,
+    # SLO attainment and swap-out counts are recorded for the SLO story
+    # (TTFT margins at this model scale sit near host noise, so they are
+    # reported, not claimed).  Interleaved best-of-3 like section 4.
+    ov_n = 20 if smoke else 40
+    ov_slo = {top_k: 250.0, 1: 10000.0}
+
+    def ov_shaped(seed):
+        trace = make_trace(WorkloadConfig(
+            n_requests=ov_n, rate=60.0, arrival="burst",
+            burst_every_s=0.5, burst_len_s=0.15, burst_factor=6.0,
+            prompt_lens=(24,), shared_prefix_len=16, n_shared_prefixes=2,
+            length_dist="zipf", new_tokens=(48,), max_new_cap=56,
+            tier_mix=((top_k, 0.4), (1, 0.6)), vocab_size=cfg.vocab_size,
+            seed=seed))
+        for r in trace:
+            if r.k == top_k:           # premium = short interactive turns
+                r.max_new_tokens = 4   # ...landing after the pool fills
+                r.arrival += 0.15
+        return trace
+
+    ov_warm, ov_trace = ov_shaped(12), ov_shaped(11)
+    ov_cases = [
+        ("cold", {}),
+        ("prefix", {"prefix_cache": True}),
+        ("traffic", {"prefix_cache": True, "preemption": True,
+                     "slo_ms": ov_slo}),
+    ]
+    ov_counters = ("prefix_hit_blocks", "prefix_hit_tokens",
+                   "prefix_cow_copies", "prefix_evictions",
+                   "swap_outs", "swap_ins")
+    ov_engines = {}
+    for name, extra in ov_cases:
+        eng = ServingEngine(cfg, params, num_slots=8, slot_len=80,
+                            slot_k=(top_k,) * 4 + (1,) * 4,
+                            block_size=8, num_blocks=32, **extra)
+        # block-gated admission makes prefill group sizes
+        # timing-dependent: precompile every bucket the run could hit
+        # (caps at the 4 slots per tier), then run a same-shape warm
+        # trace (different seed: its cached prefixes never match the
+        # measured prompts) to compile the decode/swap/scatter paths
+        for kk in (1, top_k):
+            b = 1
+            while b // 2 < 4:
+                eng._prefill_fn(eng.params, eng._prefill_trainable(kk),
+                                jnp.zeros((b, 24), jnp.int32),
+                                jnp.ones((b,), jnp.float32), k=kk)
+                b *= 2
+        eng.run([Request(rid=-1 - r.rid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens, k=r.k,
+                         arrival=r.arrival) for r in ov_warm])
+        ov_engines[name] = eng
+
+    ov_stats = {}
+    for rep_i in range(3):
+        for name, _ in ov_cases:
+            eng = ov_engines[name]
+            eng.pool.peak_blocks = 0
+            for c in ov_counters:
+                setattr(eng.pool, c, 0)
+            rep = eng.run([Request(rid=r.rid, prompt=r.prompt,
+                                   max_new_tokens=r.max_new_tokens,
+                                   k=r.k, arrival=r.arrival)
+                           for r in ov_trace])
+            o = rep.summary()
+            cur = {
+                "peak_kv_bytes": eng.pool.peak_kv_bytes(),
+                "peak_blocks": eng.pool.peak_blocks,
+                "req_per_s": o["requests_per_s"],
+                "preemptions": rep.preemptions,
+                "prefix_hit_tokens": rep.prefix.get("hit_tokens", 0),
+                "per_tier": {
+                    t: {"ttft_p50_ms": row["ttft_p50_ms"],
+                        "ttft_p99_ms": row["ttft_p99_ms"],
+                        "gen_tokens_per_s": row["gen_tokens_per_s"],
+                        "slo_attainment": row.get("slo_attainment")}
+                    for t, row in o["per_tier"].items()},
+            }
+            best = ov_stats.get(name)
+            if (best is None
+                    or cur["per_tier"][str(top_k)]["ttft_p50_ms"]
+                    < best["per_tier"][str(top_k)]["ttft_p50_ms"]):
+                ov_stats[name] = cur
+
+    ov_rows = []
+    for name, _ in ov_cases:
+        st = ov_stats[name]
+        for t, row in st["per_tier"].items():
+            ov_rows.append({
+                "engine": name, "tier_k": t,
+                "peak_kv_bytes": st["peak_kv_bytes"],
+                "req_per_s": st["req_per_s"],
+                "ttft_p50_ms": row["ttft_p50_ms"],
+                "ttft_p99_ms": row["ttft_p99_ms"],
+                "slo_attainment": (float("nan")
+                                   if row["slo_attainment"] is None
+                                   else row["slo_attainment"]),
+                "preemptions": st["preemptions"],
+                "prefix_hit_tokens": st["prefix_hit_tokens"]})
+    emit("serving_overload", ov_rows,
+         ["engine", "tier_k", "peak_kv_bytes", "req_per_s", "ttft_p50_ms",
+          "ttft_p99_ms", "slo_attainment", "preemptions",
+          "prefix_hit_tokens"])
+    kv_save = (1.0 - ov_stats["prefix"]["peak_kv_bytes"]
+               / max(ov_stats["cold"]["peak_kv_bytes"], 1)) * 100.0
+    prm = str(top_k)
+    tr = ov_stats["traffic"]["per_tier"]
+    cold_tier = ov_stats["cold"]["per_tier"]
+    print(f"# CLAIM serving: under a flash-crowd shared-prefix overload "
+          f"the prefix cache cuts peak KV bytes {kv_save:.0f}% below cold "
+          f"({ov_stats['prefix']['peak_kv_bytes']} vs "
+          f"{ov_stats['cold']['peak_kv_bytes']}, "
+          f"{ov_stats['prefix']['prefix_hit_tokens']} prompt tokens served "
+          f"from cache); under per-tier SLOs premium TTFT p50 held at "
+          f"{tr[prm]['ttft_p50_ms']:.0f} ms (cold FIFO "
+          f"{cold_tier[prm]['ttft_p50_ms']:.0f} ms) with SLO attainment "
+          f"{tr[prm]['slo_attainment']:.2f} against the 250 ms target "
+          f"({ov_stats['traffic']['preemptions']} decode swap-outs)")
+
     print("# BENCH JSON: " + json.dumps(
         {"bench": "serving", "requests": n_req, "slots": num_slots,
          "seq_req_per_s": n_req / seq_wall,
@@ -422,7 +550,8 @@ def run(smoke: bool = False) -> None:
          "dense_nodrop_step_ratio": dense_ratio,
          "paged_mixed": mix_stats,
          "paged_mixed_speedup": paged_speed,
-         "speculative": spec_stats}))
+         "speculative": spec_stats,
+         "overload": ov_stats}))
 
     if not smoke:
         # ---- open-loop Poisson trace with a premium/economy tier mix ----

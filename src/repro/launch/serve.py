@@ -9,9 +9,16 @@ throughput and TTFT/latency percentiles; without ``--local`` it builds
 the sharded serve step for the production mesh (use repro.launch.dryrun
 in this offline container).
 
+Production-traffic knobs (docs/serving.md): ``--prefix-cache`` (shared
+prompt blocks pay KV once), ``--preemption`` + ``--slo-ms K:MS,...``
+(per-tier TTFT targets driving EDF admission and decode swap-out), and
+trace shaping via ``--arrival {poisson,diurnal,burst}``,
+``--length-dist {categorical,zipf}``, ``--shared-prefix N``.
+
   PYTHONPATH=src python -m repro.launch.serve --local \
       --arch olmoe-1.3b-6.9b --slots 8 --mix 8:0.5,1:0.5 \
-      --requests 16 --rate 20 --new-tokens 16 --block-size 16
+      --requests 16 --rate 20 --new-tokens 16 --block-size 16 \
+      --prefix-cache --shared-prefix 4 --slo-ms 8:250,1:2000 --preemption
 """
 from __future__ import annotations
 
@@ -60,7 +67,27 @@ def slot_k_for_mix(mix, num_slots: int):
     return tuple(slot_k)
 
 
-def main() -> None:
+def parse_slo(spec: str):
+    """``"8:150,1:1000"`` -> per-tier TTFT targets {k: ms}; ``""`` -> None.
+
+    A single bare number (``"250"``) has no tier to attach to — require
+    the k:ms form so the target unambiguously names a tier."""
+    if not spec:
+        return None
+    out = {}
+    for part in spec.split(","):
+        try:
+            k, ms = part.split(":")
+            out[int(k)] = float(ms)
+        except ValueError:
+            raise SystemExit(f"--slo-ms: bad entry {part!r} "
+                             "(expected K:MILLISECONDS[,K:MS...])")
+    return out
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The serving launcher's CLI (kept separate from :func:`main` so
+    tools/docs_check.py can verify every flag docs/serving.md names)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-1.3b-6.9b")
     ap.add_argument("--shape", default="decode_32k")
@@ -99,15 +126,44 @@ def main() -> None:
                          "round and verified in one step)")
     ap.add_argument("--draft-k", type=int, default=1,
                     help="expert budget for the draft pass (the cheap k)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed prompt block sharing in the "
+                         "paged pool (refcounts + copy-on-write): requests "
+                         "with a common system prompt pay its KV once")
+    ap.add_argument("--preemption", action="store_true",
+                    help="SLO-driven decode preemption: swap the most "
+                         "lenient-deadline active request out to host when "
+                         "a waiter misses its TTFT target (needs --slo-ms "
+                         "and the paged layout)")
+    ap.add_argument("--slo-ms", default="",
+                    help="per-tier TTFT targets K:MS[,K:MS...] — switches "
+                         "admission to earliest-deadline-first and adds "
+                         "per-tier SLO attainment to the report")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=float("inf"),
-                    help="Poisson arrival rate (req/s); inf = closed batch")
+                    help="mean arrival rate (req/s); inf = closed batch")
+    ap.add_argument("--arrival", choices=("poisson", "diurnal", "burst"),
+                    default="poisson",
+                    help="arrival process around --rate: homogeneous "
+                         "Poisson, sinusoidal day/night modulation, or "
+                         "periodic flash-crowd bursts (serving/workload.py)")
+    ap.add_argument("--length-dist", choices=("categorical", "zipf"),
+                    default="categorical",
+                    help="output-length distribution: fixed --new-tokens, "
+                         "or a heavy Zipf tail capped at 64")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared system-prompt tokens at the head of every "
+                         "prompt (exercises --prefix-cache)")
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--mix", default="",
                     help="tier mix k:frac[,k:frac...] (FLAME adaptive-k); "
                          "empty = full top_k everywhere")
     ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     if not args.local:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
@@ -151,10 +207,17 @@ def main() -> None:
     if not prompt_lens:
         raise SystemExit(f"--slot-len {args.slot_len} too small for the "
                          "workload's 8-token prompts (need >= 9)")
+    if args.shared_prefix and args.shared_prefix >= min(prompt_lens):
+        raise SystemExit(f"--shared-prefix {args.shared_prefix} must be "
+                         f"shorter than the shortest prompt "
+                         f"({min(prompt_lens)} tokens)")
     wl = WorkloadConfig(
         n_requests=args.requests, rate=args.rate,
         prompt_lens=prompt_lens, new_tokens=(args.new_tokens,),
-        tier_mix=mix, vocab_size=cfg.vocab_size)
+        tier_mix=mix, vocab_size=cfg.vocab_size,
+        arrival=args.arrival, length_dist=args.length_dist,
+        shared_prefix_len=args.shared_prefix)
+    slo = parse_slo(args.slo_ms)
     spec = None
     if args.speculate:
         if not cfg.moe.enabled:
@@ -167,15 +230,23 @@ def main() -> None:
                            block_size=args.block_size,
                            num_blocks=args.num_blocks,
                            dispatch=args.dispatch,
-                           speculative=spec)
+                           speculative=spec,
+                           prefix_cache=args.prefix_cache,
+                           preemption=args.preemption,
+                           slo_ms=slo)
     pool_desc = (f"{engine.pool.num_blocks} x {engine.pool.block_size}"
                  f"-token KV blocks" if engine.paged
                  else "slotted KV pool")
     spec_desc = (f", speculative W={args.window} draft_k={args.draft_k}"
                  if spec else "")
+    traffic = [flag for flag, on in
+               (("prefix-cache", args.prefix_cache),
+                ("preemption", args.preemption),
+                (f"slo={args.slo_ms}", bool(slo))) if on]
+    traffic_desc = f", {' '.join(traffic)}" if traffic else ""
     print(f"{cfg.name}: {args.slots} slots × {args.slot_len} tokens "
           f"({pool_desc}), slot_k={engine.slot_k}, "
-          f"dispatch={engine.dispatch}{spec_desc}")
+          f"dispatch={engine.dispatch}{spec_desc}{traffic_desc}")
     report = engine.run(make_trace(wl))
     for key, val in report.summary().items():
         print(f"  {key}: {val:.2f}" if isinstance(val, float)

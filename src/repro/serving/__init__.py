@@ -4,18 +4,21 @@ The subsystem has four layers (docs/architecture.md §Serving):
 
 * :mod:`repro.serving.kv_cache`  — ``BlockPool``: the block-paged KV pool
   (global fixed-size KV blocks, per-request block tables, on-demand
-  allocation, reservation-backed admission math) and ``SlotPool``, the
-  legacy monolithic slotted pool kept as the differential-test oracle;
-* :mod:`repro.serving.scheduler` — ``Request``/``Scheduler``: FIFO queue
-  with tier-aware admission into free slots, plus an optional can-admit
-  resource predicate (projected block need) with per-tier head-of-line
-  fairness;
+  allocation, reservation-backed admission math, refcounted prefix
+  caching with copy-on-write, swap-out/swap-in for preemption) and
+  ``SlotPool``, the legacy monolithic slotted pool kept as the
+  differential-test oracle;
+* :mod:`repro.serving.scheduler` — ``Request``/``Scheduler``: FIFO or
+  earliest-deadline-first (per-tier TTFT SLO) queue with tier-aware
+  admission into free slots, plus an optional can-admit resource
+  predicate (projected block need) with per-tier head-of-line fairness;
 * :mod:`repro.serving.engine`    — ``ServingEngine``: the continuous-
   batching loop; one jitted decode step over the whole slot batch with
-  **per-slot expert budget k** (FLAME's adaptive-k at serving time) and
-  the rescaler applied per slot;
+  **per-slot expert budget k** (FLAME's adaptive-k at serving time), the
+  rescaler applied per slot, and SLO-driven decode preemption;
 * :mod:`repro.serving.workload`  — synthetic open-loop arrival traces
-  (Poisson arrivals, length/tier mixes) and latency percentile helpers;
+  (Poisson/diurnal/burst arrivals, heavy-tail lengths, shared prompt
+  prefixes, tier mixes) and latency percentile helpers;
 * :mod:`repro.serving.sampler`   — pure logits -> token sampling
   (greedy / temperature / top-p) with explicit PRNG threading;
 * :mod:`repro.serving.speculative` — self-speculative decoding: draft at

@@ -42,6 +42,25 @@ serving path.  ``speculative=SpeculativeConfig(...)`` switches decode to
 self-speculative rounds: draft W tokens per slot at ``draft_k``, verify
 in one full-k multi-token step, accept by the rejection rule and roll
 rejected K/V back (serving/speculative.py).
+
+Production traffic controls (docs/serving.md is the operations guide):
+
+* ``prefix_cache=True`` (paged only) — prompts are content-matched
+  against the pool's block index at ``write`` time, so requests sharing
+  a system prompt hold its KV blocks once (refcounts + copy-on-write in
+  kv_cache.BlockPool).  Numerically invisible: prefill K/V for equal
+  tokens is equal, so sharing the blocks changes no output.
+* ``slo_ms={tier_k: target_ms}`` — per-tier TTFT targets; the scheduler
+  switches to earliest-deadline-first admission and ``summary()`` gains
+  per-tier p50/p99 TTFT, tokens/s and SLO attainment.
+* ``preemption=True`` (paged, needs ``slo_ms``) — when a waiter is past
+  its TTFT deadline and blocked on blocks, the engine swaps out the
+  active request with the most lenient deadline (host copy via
+  ``BlockPool.swap_out``), frees its blocks AND reservation, and lets
+  the victim resume later through normal re-admission — token-for-token
+  identical to an uncontended run, because the swap round-trips the
+  row's exact KV/SSM state and the per-request PRNG event counter lives
+  in the preserved ``_ActiveSlot``.
 """
 from __future__ import annotations
 
@@ -90,6 +109,9 @@ class _ActiveSlot:
     # (seed, rid, events) into its key, so draws are keyed by the
     # request's own draw order — independent of co-batched rows
     events: int = 0
+    # times this request was swapped out mid-decode; capped by the
+    # engine's max_preemptions so repeated preemption cannot livelock
+    preemptions: int = 0
 
 
 @dataclass
@@ -107,11 +129,43 @@ class ServingReport:
     spec_rounds: int = 0
     spec_drafted: int = 0
     spec_accepted: int = 0
+    # production-traffic accounting
+    preemptions: int = 0                     # swap-outs over the run
+    prefix: Dict[str, int] = field(default_factory=dict)
+    slo_ms: Optional[Dict[Optional[int], float]] = None
 
     def tokens_by_rid(self) -> Dict[int, np.ndarray]:
+        """Generated tokens keyed by request id."""
         return {c.rid: c.tokens for c in self.completions}
 
-    def summary(self) -> Dict[str, float]:
+    def per_tier(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier latency/throughput: p50/p99 TTFT, tokens/s and (when
+        ``slo_ms`` targets are set) the fraction of requests whose TTFT
+        met the tier's target.  Keys are ``str(k)`` (``"0"`` = non-MoE)."""
+        by_tier: Dict[int, List[Completion]] = {}
+        for c in self.completions:
+            by_tier.setdefault(c.k, []).append(c)
+        out: Dict[str, Dict[str, float]] = {}
+        for k, cs in sorted(by_tier.items()):
+            ttfts = [c.ttft for c in cs]
+            row = {
+                "n_requests": len(cs),
+                "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
+                "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
+                "gen_tokens_per_s": (sum(c.n_generated for c in cs)
+                                     / max(self.wall_s, 1e-9)),
+            }
+            slo = (self.slo_ms or {}).get(k)
+            if slo is not None:
+                row["slo_attainment"] = (
+                    sum(t * 1e3 <= slo for t in ttfts) / len(cs))
+            out[str(k)] = row
+        return out
+
+    def summary(self) -> Dict[str, Any]:
+        """Flat run summary (JSON-safe): aggregate latency/throughput,
+        per-tier breakdown, and speculation / prefix-cache / preemption
+        accounting when those features were on."""
         n = len(self.completions)
         gen = sum(c.n_generated for c in self.completions)
         ttfts = [c.ttft for c in self.completions]
@@ -124,13 +178,19 @@ class ServingReport:
             "gen_tokens_per_s": gen / max(self.wall_s, 1e-9),
             "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
             "ttft_p95_ms": percentile(ttfts, 95) * 1e3,
+            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
             "latency_p50_ms": percentile(lats, 50) * 1e3,
             "latency_p95_ms": percentile(lats, 95) * 1e3,
             "decode_step_ms_mean": (float(np.mean(self.decode_step_s)) * 1e3
                                     if self.decode_step_s else float("nan")),
             "decode_steps": len(self.decode_step_s),
             "truncated": sum(c.truncated for c in self.completions),
+            "per_tier": self.per_tier(),
         }
+        if self.preemptions:
+            out["preemptions"] = self.preemptions
+        if self.prefix:
+            out["prefix_cache"] = dict(self.prefix)
         if self.spec_rounds:
             out.update({
                 "spec_rounds": self.spec_rounds,
@@ -188,6 +248,14 @@ class ServingEngine:
 
     ``no_drop`` is the legacy alias (``True`` -> ``"dense"``, ``False``
     -> ``"capacity"``); leave both unset for the ragged default.
+
+    Production traffic knobs (see the module docstring and
+    docs/serving.md): ``prefix_cache`` (paged-only block sharing for
+    prompts), ``slo_ms`` (per-tier TTFT targets in milliseconds, keyed
+    by tier ``k`` — switches admission to earliest-deadline-first),
+    ``preemption`` (paged-only decode swap-out under deadline pressure;
+    requires ``slo_ms``) and ``max_preemptions`` (per-request swap-out
+    cap — the anti-livelock bound).
     """
 
     def __init__(self, cfg, params: PyTree, *, lora: Optional[PyTree] = None,
@@ -200,6 +268,10 @@ class ServingEngine:
                  dispatch: Optional[str] = None,
                  sampler: Optional[SamplerConfig] = None,
                  speculative: Optional[SpeculativeConfig] = None,
+                 prefix_cache: bool = False,
+                 preemption: bool = False,
+                 slo_ms: Optional[Dict[Optional[int], float]] = None,
+                 max_preemptions: int = 4,
                  seed: int = 0):
         assert cfg.num_codebooks == 0, "serving engine: text models only"
         assert kv_layout in ("paged", "slotted"), kv_layout
@@ -214,6 +286,23 @@ class ServingEngine:
         has_attn = any(cfg.layer_kind(p) == "attn"
                        for p in range(cfg.pattern_period))
         self.paged = kv_layout == "paged" and has_attn
+        if prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache needs the paged KV layout (block sharing "
+                "has no meaning in the slotted pool)")
+        if preemption:
+            if not self.paged:
+                raise ValueError(
+                    "preemption needs the paged KV layout (swap-out "
+                    "frees blocks, not whole slots)")
+            if not slo_ms:
+                raise ValueError(
+                    "preemption needs slo_ms targets: victim selection "
+                    "is driven by TTFT deadlines")
+            if speculative is not None:
+                raise ValueError(
+                    "preemption under speculative decoding is not "
+                    "supported yet")
         if cfg.moe.enabled:
             resolved = tuple(int(v) for v in (
                 slot_k if slot_k is not None
@@ -234,7 +323,8 @@ class ServingEngine:
         if self.paged:
             self.pool = BlockPool(cfg, num_slots, slot_len,
                                   block_size=block_size,
-                                  num_blocks=num_blocks)
+                                  num_blocks=num_blocks,
+                                  prefix_cache=prefix_cache)
             # per-tier block quotas (proportional to the tier's slot
             # share, floored at one full request): a tier may exceed its
             # quota only while no OTHER tier has requests waiting, so a
@@ -252,7 +342,20 @@ class ServingEngine:
             self._tier_reserved = {t: 0 for t in counts}
         else:
             self.pool = SlotPool(cfg, num_slots, slot_len)
-        self.scheduler = Scheduler()
+        self.prefix_cache = prefix_cache
+        self.slo_ms = dict(slo_ms) if slo_ms else None
+        self._preemption = preemption
+        self._max_preemptions = max_preemptions
+        # rid -> (pool swap state, _ActiveSlot, last sampled token):
+        # everything a preempted request needs to resume bit-exactly
+        self._swapped: Dict[int, Tuple[Dict[str, Any], _ActiveSlot,
+                                       int]] = {}
+        if self.slo_ms:
+            self.scheduler = Scheduler(
+                policy="slo",
+                tier_slo_s={t: ms / 1e3 for t, ms in self.slo_ms.items()})
+        else:
+            self.scheduler = Scheduler()
         self._active: List[Optional[_ActiveSlot]] = [None] * num_slots
         self._last_tok = np.zeros((num_slots, 1), np.int32)
 
@@ -414,6 +517,75 @@ class ServingEngine:
         return req.prompt_len + max(self._max_new(req), 1) - 1
 
     def _admit(self, report: ServingReport) -> int:
+        """One admission round: a normal packing pass, then — with
+        preemption on — swap out lenient-deadline victims while a waiter
+        is past its TTFT deadline and another pass can seat it."""
+        n = self._admit_pass(report)
+        if self._preemption:
+            for _ in range(self.num_slots):
+                victim = self._pick_victim()
+                if victim is None:
+                    break
+                self._preempt(victim, report)
+                got = self._admit_pass(report)
+                n += got
+                if got == 0:
+                    # the freed blocks alone didn't seat the waiter
+                    # (quota-bound, or it needs more than one victim);
+                    # stop rather than strip the pool in one round —
+                    # the next engine iteration tries again
+                    break
+        return n
+
+    def _pick_victim(self) -> Optional[int]:
+        """SLO-driven victim selection: when the most urgent waiter is
+        already past its TTFT deadline, choose the active request with
+        the most lenient (latest) deadline — strictly later than the
+        waiter's, so preemption always moves urgency forward and a
+        same-tier earlier arrival can never be evicted for a later one —
+        breaking ties toward the most recently admitted (least sunk
+        work).  Requests already preempted ``max_preemptions`` times are
+        exempt."""
+        if not len(self.scheduler):
+            return None
+        sch = self.scheduler
+        now = self._now()
+        urgent = [sch.deadline(r) for r in sch.queue
+                  if sch.deadline(r) <= now]
+        if not urgent:
+            return None
+        w_deadline = min(urgent)
+        best: Optional[int] = None
+        best_key: Optional[Tuple[float, float]] = None
+        for s, a in enumerate(self._active):
+            if a is None or a.preemptions >= self._max_preemptions:
+                continue
+            v_deadline = sch.deadline(a.req)
+            if v_deadline <= w_deadline:
+                continue
+            key = (v_deadline, a.admitted)
+            if best_key is None or key > best_key:
+                best, best_key = s, key
+        return best
+
+    def _preempt(self, slot: int, report: ServingReport) -> None:
+        """Swap ``slot``'s request out to host and hand it back to the
+        scheduler: blocks and reservation are freed (BlockPool.swap_out),
+        so the waiter's admission sees real headroom; the request's tier
+        is pinned to its slot's ``k`` so re-admission resumes it at the
+        budget it started decoding with."""
+        a = self._active[slot]
+        tier = self.slot_k[slot]
+        self._tier_reserved[tier] -= self.pool.reserved_for(slot)
+        state = self.pool.swap_out(slot)
+        a.preemptions += 1
+        a.req.k = tier
+        self._swapped[a.req.rid] = (state, a, int(self._last_tok[slot, 0]))
+        self._active[slot] = None
+        self.scheduler.add(a.req)
+        report.preemptions += 1
+
+    def _admit_pass(self, report: ServingReport) -> int:
         free = self.pool.free_slots
         if not free or not len(self.scheduler):
             return 0
@@ -474,6 +646,16 @@ class ServingEngine:
                 need = self.pool.blocks_needed(self._projected_tokens(req))
                 self.pool.reserve(slot, self._projected_tokens(req))
                 self._tier_reserved[self.slot_k[slot]] += need
+            if req.rid in self._swapped:
+                # resume a preempted request: restore its exact KV/SSM
+                # state and bookkeeping instead of prefilling — its
+                # admitted/first_token timestamps and PRNG event counter
+                # continue from where the swap-out left them
+                state, a, last = self._swapped.pop(req.rid)
+                self.pool.swap_in(slot, state)
+                self._active[slot] = a
+                self._last_tok[slot, 0] = last
+                continue
             assert req.prompt_len + 1 <= self.slot_len, \
                 f"request {req.rid}: prompt {req.prompt_len} leaves no room" \
                 f" in a {self.slot_len}-token slot"
@@ -491,7 +673,8 @@ class ServingEngine:
                 self.params, self._prefill_trainable(kk),
                 jnp.asarray(prompts), real, k=kk)
             logits_np = np.asarray(logits)          # blocks until ready
-            self.pool.write([s for _, s in items], cache, [L] * nb)
+            self.pool.write([s for _, s in items], cache, [L] * nb,
+                            tokens=[r.prompt for r, _ in items])
             tft = self._now()
             report.prefill_s.append(tft - admitted)
 
@@ -581,7 +764,8 @@ class ServingEngine:
             k=self.slot_k[slot] or 0, arrival=a.req.arrival,
             admitted=a.admitted, first_token=a.first_token,
             finished=self._now(), nll_sum=a.nll,
-            truncated=len(a.tokens) < a.max_new))
+            truncated=len(a.tokens) < a.max_new,
+            preemptions=a.preemptions))
         self._active[slot] = None
         if self.paged:
             self._tier_reserved[self.slot_k[slot]] -= \
@@ -627,7 +811,7 @@ class ServingEngine:
         # so an empty pool can always admit any slot-length-valid request)
         pending = sorted(requests, key=lambda r: r.arrival)
         report = ServingReport(completions=[], num_slots=self.num_slots,
-                               slot_k=self.slot_k)
+                               slot_k=self.slot_k, slo_ms=self.slo_ms)
         self._t0 = time.perf_counter()
         steps = 0
         while pending or len(self.scheduler) or self.n_active:
@@ -654,4 +838,8 @@ class ServingEngine:
                         f"(slot_k={self.slot_k})")
         report.wall_s = self._now()
         report.completions.sort(key=lambda c: c.rid)
+        assert not self._swapped or max_steps is not None, \
+            "swapped-out requests left behind after a full run"
+        if self.prefix_cache:
+            report.prefix = self.pool.prefix_stats()
         return report

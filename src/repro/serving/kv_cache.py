@@ -24,13 +24,38 @@ admit time so on-demand allocation during decode can never fail; the
 ``available_blocks`` headroom — free blocks minus outstanding unallocated
 reservations — is what the scheduler's can-admit predicate consults.
 
+Prefix caching (``prefix_cache=True``, linear caches only): every prompt
+block is content-addressed by a chained SHA-1 digest of the token ids it
+holds, blocks carry reference counts, and :meth:`write` attaches a new
+request to the longest cached chain matching its prompt instead of
+scattering duplicate K/V — N concurrent requests sharing a system prompt
+hold its blocks ONCE.  A shared attach is charged against the attaching
+request's (unchanged, conservative) reservation as *shared*, not owned:
+the reservation keeps covering a private replacement, so the
+copy-on-write in :meth:`prepare_decode` — taken when a request's next
+decode write lands in a block referenced by other rows — can never fail
+for want of a free block.  ``release``/``truncate_to`` decrement
+refcounts and return a block to the free list only at refcount zero;
+free-but-cached blocks are revived on an exact digest match and their
+cache entry is evicted when generic allocation repurposes them.
+
+Preemption support: :meth:`swap_out` copies a victim row's live blocks
+(and per-row SSM state) to host memory and releases the row — blocks,
+reservation and all — so its capacity is genuinely reusable;
+:meth:`swap_in` is the exact inverse into a freshly reserved row.
+Dropping the reservation at swap-out is what makes preempt/resume
+deadlock-free: a swapped request re-enters through normal admission with
+the same projected need it was first admitted with (<= pool capacity by
+construction), so it can always eventually resume.
+
 All per-row cache leaves carry the layout ``(n_periods, batch, ...)``;
 paged attention leaves are ``(n_periods, num_blocks + 1, block_size, KV,
 head_dim)``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +91,7 @@ class _RowPool:
         return len(self._free)
 
     def allocate(self) -> int:
+        """Claim the lowest-id free row and return it."""
         if not self._free:
             raise RuntimeError(f"{type(self).__name__}: no free rows")
         self._free.sort()
@@ -90,6 +116,7 @@ class _RowPool:
                 f"(allocate/take them first)")
 
     def release(self, slot: int) -> None:
+        """Return a claimed row to the free list."""
         assert 0 <= slot < self.num_slots and slot not in self._free, slot
         self.cache_pos[slot] = 0
         self._free.append(slot)
@@ -144,14 +171,18 @@ class SlotPool(_RowPool):
 
     # ------------------------------------------------------------- cache I/O
     def write(self, slots: Sequence[int], piece: PyTree,
-              lengths: Sequence[int]) -> None:
+              lengths: Sequence[int],
+              tokens: Optional[Sequence[np.ndarray]] = None) -> None:
         """Install a freshly prefilled cache into ``slots``.
 
         ``piece``: a cache tree with batch size ``>= len(slots)`` on axis 1
         (extra rows — prefill bucket padding — are ignored);
         ``lengths``: per-slot prompt length, i.e. the position the first
-        decode step will write.
+        decode step will write.  ``tokens`` (the per-slot prompt ids) is
+        accepted for signature parity with :meth:`BlockPool.write` and
+        ignored — the slotted layout has no block sharing to key.
         """
+        del tokens
         self._require_live(slots)
         idx = np.asarray(list(slots), np.int32)
         nb = len(idx)
@@ -174,11 +205,18 @@ class BlockPool(_RowPool):
     lazily (prompt blocks at :meth:`write`, decode blocks at
     :meth:`prepare_decode`), and returned at :meth:`release`.
 
+    ``prefix_cache=True`` turns on content-addressed block sharing for
+    prompts (refcounts + copy-on-write; see the module docstring).  It
+    requires a linear cache (``cfg.attention_window == 0``): a wrapped
+    ring overwrites logical positions in place, which would corrupt
+    shared prefix blocks under other readers.
+
     Mamba SSM state is O(1)/request and stays per-row (never paged).
     """
 
     def __init__(self, cfg, num_slots: int, slot_len: int,
-                 block_size: int = 16, num_blocks: int = None):
+                 block_size: int = 16, num_blocks: int = None,
+                 prefix_cache: bool = False):
         assert block_size >= 1, block_size
         super().__init__(cfg, num_slots, slot_len)
         self.block_size = block_size
@@ -203,6 +241,31 @@ class BlockPool(_RowPool):
         self._nalloc = np.zeros((num_slots,), np.int64)
         self.peak_blocks = 0
 
+        if prefix_cache and cfg.attention_window > 0:
+            raise ValueError(
+                "prefix_cache requires a linear cache "
+                "(cfg.attention_window == 0): a wrapped ring rewrites "
+                "logical positions in place under shared readers")
+        self.prefix_cache = bool(prefix_cache)
+        # per-block reference count (index 0 = trash block, always 0) and
+        # per-slot count of table entries attached via live sharing —
+        # those are NOT "owned": the slot's reservation keeps covering a
+        # private replacement so copy-on-write can never fail
+        self._ref = np.zeros((num_blocks + 1,), np.int32)
+        self._nshared = np.zeros((num_slots,), np.int64)
+        self._shared_mark = np.zeros((num_slots, self.blocks_per_slot),
+                                     bool)
+        # content-addressed prefix index: chained digest <-> block id
+        self._cache_map: Dict[bytes, int] = {}
+        self._block_key: Dict[int, bytes] = {}
+        # observability counters (prefix_stats / ServingReport)
+        self.prefix_hit_blocks = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_cow_copies = 0
+        self.prefix_evictions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+
     def tables(self) -> jnp.ndarray:
         """Per-row block tables as a device array for the decode step."""
         return jnp.asarray(self.block_table)
@@ -215,15 +278,24 @@ class BlockPool(_RowPool):
 
     @property
     def blocks_in_use(self) -> int:
-        return int(self._nalloc.sum())
+        """Distinct pool blocks currently referenced by at least one row
+        (a block shared by N rows counts once — the point of sharing)."""
+        return self.num_blocks - len(self._free_blocks)
 
     @property
     def available_blocks(self) -> int:
-        """Free blocks not spoken for by outstanding reservations."""
-        debt = int((self._reserved - self._nalloc).sum())
+        """Free blocks not spoken for by outstanding reservations.
+
+        Debt counts *owned* allocations only: a shared-attached block
+        leaves its slot's reservation booked for a private replacement,
+        which is exactly what guarantees copy-on-write never runs the
+        free list dry."""
+        owned = self._nalloc - self._nshared
+        debt = int((self._reserved - owned).sum())
         return len(self._free_blocks) - debt
 
     def can_admit(self, n_tokens: int) -> bool:
+        """Whether a request projecting ``n_tokens`` positions fits."""
         return self.blocks_needed(n_tokens) <= self.available_blocks
 
     def reserved_for(self, slot: int) -> int:
@@ -240,6 +312,14 @@ class BlockPool(_RowPool):
             f"{self.available_blocks}")
         self._reserved[slot] = need
 
+    def _evict_entry(self, bid: int) -> None:
+        """Drop ``bid``'s prefix-cache entry (its content is about to be
+        overwritten by a generic allocation or copy-on-write target)."""
+        key = self._block_key.pop(bid, None)
+        if key is not None:
+            del self._cache_map[key]
+            self.prefix_evictions += 1
+
     def _alloc_block(self, slot: int) -> None:
         assert self._nalloc[slot] < self._reserved[slot], (
             f"slot {slot}: allocation would exceed its reservation "
@@ -248,46 +328,134 @@ class BlockPool(_RowPool):
         # test-injected permutation (permute_free) in force — physical
         # block order must be invisible to results
         bid = self._free_blocks.pop(0)
+        self._evict_entry(bid)
+        self._ref[bid] = 1
         self.block_table[slot, self._nalloc[slot]] = bid
         self._nalloc[slot] += 1
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
 
+    def _attach_block(self, slot: int, bid: int) -> None:
+        """Append a cached block to ``slot``'s table instead of
+        allocating a fresh one.  A refcount-zero block is *revived* out
+        of the free list (a content-preserving allocation, charged as
+        owned); a live block is attached as shared — its slot's
+        reservation keeps covering a private copy-on-write replacement."""
+        assert self._nalloc[slot] < self._reserved[slot], (
+            f"slot {slot}: prefix attach would exceed its reservation")
+        idx = int(self._nalloc[slot])
+        if self._ref[bid] == 0:
+            self._free_blocks.remove(bid)
+        else:
+            self._nshared[slot] += 1
+            self._shared_mark[slot, idx] = True
+        self._ref[bid] += 1
+        self.block_table[slot, idx] = bid
+        self._nalloc[slot] += 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+
+    def _detach_block(self, slot: int, idx: int) -> None:
+        """Drop table entry ``idx`` of ``slot``: decrement the block's
+        refcount and free it when no row references it any more (its
+        prefix-cache entry, if any, survives for revival)."""
+        bid = int(self.block_table[slot, idx])
+        self._ref[bid] -= 1
+        assert self._ref[bid] >= 0, f"block {bid}: negative refcount"
+        if self._ref[bid] == 0:
+            self._free_blocks.append(bid)
+        if self._shared_mark[slot, idx]:
+            self._shared_mark[slot, idx] = False
+            self._nshared[slot] -= 1
+        self.block_table[slot, idx] = 0
+
     def alloc_prompt(self, slot: int, prompt_len: int) -> None:
-        """Allocate the blocks the prompt's K/V will be installed into."""
+        """Allocate the blocks the prompt's K/V will be installed into
+        (on top of any prefix-cache attaches already in the table)."""
         while self._nalloc[slot] < self.blocks_needed(prompt_len):
             self._alloc_block(slot)
 
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Device-side copy of one block's K/V across attention leaves."""
+        def cp(leaf: jnp.ndarray) -> jnp.ndarray:
+            return leaf.at[:, dst].set(leaf[:, src])
+
+        new_cache: Dict[str, PyTree] = {}
+        for pos_key, c in self.cache.items():
+            if "attn" in c:
+                new_cache[pos_key] = {"attn": jax.tree.map(cp, c["attn"])}
+            else:
+                new_cache[pos_key] = c
+        self.cache = new_cache
+
+    def _cow(self, slot: int, idx: int) -> None:
+        """Copy-on-write: give ``slot`` a private copy of its shared
+        table entry ``idx`` before it appends into that block.  The fresh
+        block comes out of the slot's own reservation (the attach left it
+        booked), so this can never fail."""
+        assert self._shared_mark[slot, idx], (slot, idx)
+        old = int(self.block_table[slot, idx])
+        new = self._free_blocks.pop(0)
+        self._evict_entry(new)
+        self._copy_block(old, new)
+        self._ref[new] = 1
+        self._ref[old] -= 1
+        assert self._ref[old] >= 1, f"block {old}: CoW from sole referent"
+        self._shared_mark[slot, idx] = False
+        self._nshared[slot] -= 1
+        self.block_table[slot, idx] = new
+        self.prefix_cow_copies += 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+
     def prepare_decode(self, slots: Sequence[int]) -> None:
         """Allocate, for each active row, the block its next decode write
-        lands in (a no-op until the write crosses a block boundary)."""
+        lands in (a no-op until the write crosses a block boundary).
+
+        With prefix caching, a row about to append into a block it only
+        *shares* first gets a private copy (copy-on-write) — or adopts
+        the block in place when every other referent has since released
+        it.  A block's original owner never copies: borrowers only ever
+        read positions below the shared span, so the owner appending past
+        it is invisible to them."""
         for s in slots:
             p = int(self.cache_pos[s])
             logical = p % self.attn_len if self.cfg.attention_window > 0 \
                 else min(p, self.attn_len - 1)
-            while self._nalloc[s] <= logical // self.block_size:
+            bi = logical // self.block_size
+            while self._nalloc[s] <= bi:
                 self._alloc_block(s)
+            if self._shared_mark[s, bi]:
+                if self._ref[int(self.block_table[s, bi])] > 1:
+                    self._cow(s, bi)
+                else:
+                    # sole referent now: adopt in place; the booked
+                    # replacement block returns to the headroom
+                    self._shared_mark[s, bi] = False
+                    self._nshared[s] -= 1
 
     def truncate_to(self, slot: int, n_tokens: int) -> None:
         """Speculative rollback: drop the row's positions ``>= n_tokens``
-        and return the tail blocks past the kept span to the free list.
-        The reservation stays booked — the request's lifetime projection
-        is unchanged, so re-allocating the freed tail during later decode
+        and release the tail blocks past the kept span (refcount-aware —
+        a shared tail block survives under its other readers).  The
+        reservation stays booked — the request's lifetime projection is
+        unchanged, so re-allocating the freed tail during later decode
         (prepare_decode) can never fail."""
         super().truncate_to(slot, n_tokens)            # guards + cache_pos
         keep = -(-min(n_tokens, self.attn_len) // self.block_size)
         n = int(self._nalloc[slot])
+        for idx in range(keep, n):
+            self._detach_block(slot, idx)
         if keep < n:
-            self._free_blocks.extend(
-                int(b) for b in self.block_table[slot, keep:n])
-            self.block_table[slot, keep:n] = 0
             self._nalloc[slot] = keep
 
     def release(self, slot: int) -> None:
-        n = int(self._nalloc[slot])
-        self._free_blocks.extend(int(b) for b in self.block_table[slot, :n])
+        """Evict a finished request: drop every table entry (refcount-
+        aware), clear the reservation, and free the row."""
+        for idx in range(int(self._nalloc[slot])):
+            self._detach_block(slot, idx)
         self.block_table[slot, :] = 0
+        self._shared_mark[slot, :] = False
         self._reserved[slot] = 0
         self._nalloc[slot] = 0
+        self._nshared[slot] = 0
         super().release(slot)                  # asserts against double free
 
     def permute_free(self, seed: int) -> None:
@@ -298,14 +466,23 @@ class BlockPool(_RowPool):
         self._free_blocks = [self._free_blocks[i] for i in order]
 
     def check_invariants(self) -> None:
-        """Free-list integrity: no double-allocation, no leaks,
-        used + free == total after every operation."""
-        used_ids = [int(self.block_table[s, j])
-                    for s in range(self.num_slots)
-                    for j in range(int(self._nalloc[s]))]
+        """Free-list/refcount integrity: every block's refcount equals
+        the number of table entries pointing at it, no block is both
+        referenced and free, distinct used + free == total, shared-mark
+        bookkeeping is consistent, and no row outruns its reservation."""
+        counted: Dict[int, int] = {}
+        for s in range(self.num_slots):
+            for j in range(int(self._nalloc[s])):
+                b = int(self.block_table[s, j])
+                counted[b] = counted.get(b, 0) + 1
+        used_ids = sorted(counted)
         free_ids = list(self._free_blocks)
-        assert len(set(used_ids)) == len(used_ids), "double-allocated block"
         assert 0 not in used_ids, "trash block handed out"
+        for b in range(1, self.num_blocks + 1):
+            assert int(self._ref[b]) == counted.get(b, 0), \
+                f"block {b}: refcount {int(self._ref[b])} != " \
+                f"{counted.get(b, 0)} table references"
+        assert len(set(free_ids)) == len(free_ids), "double-freed block"
         assert not set(used_ids) & set(free_ids), \
             "block simultaneously used and free"
         assert len(used_ids) + len(free_ids) == self.num_blocks, \
@@ -316,13 +493,150 @@ class BlockPool(_RowPool):
             n = int(self._nalloc[s])
             assert (self.block_table[s, n:] == 0).all(), \
                 f"slot {s}: stale table entries past nalloc"
+            assert not self._shared_mark[s, n:].any(), \
+                f"slot {s}: stale shared marks past nalloc"
+            assert int(self._shared_mark[s, :n].sum()) \
+                == int(self._nshared[s]), f"slot {s}: nshared mismatch"
             assert self._nalloc[s] <= self._reserved[s], \
                 f"slot {s}: allocated past its reservation"
+        for key, bid in self._cache_map.items():
+            assert self._block_key.get(bid) == key, \
+                f"prefix index: block {bid} map/reverse-map mismatch"
+            assert 1 <= bid <= self.num_blocks
+        assert len(self._cache_map) == len(self._block_key)
         assert self.available_blocks >= 0
+
+    # --------------------------------------------------------- prefix cache
+    def _prefix_keys(self, toks: np.ndarray
+                     ) -> Tuple[List[bytes], Optional[bytes]]:
+        """Chained content digests for a prompt: one per FULL block (each
+        digest covers the whole prefix up to that block), plus a distinct
+        digest for the partial tail block when the prompt doesn't end on
+        a block boundary.  Chaining makes a block's key identify its
+        entire prefix, so matching is a simple walk."""
+        toks = np.ascontiguousarray(np.asarray(toks, np.int32))
+        bs = self.block_size
+        keys: List[bytes] = []
+        h = b"prefix:"
+        for i in range(len(toks) // bs):
+            h = hashlib.sha1(h + toks[i * bs:(i + 1) * bs].tobytes()) \
+                .digest()
+            keys.append(h)
+        tail = None
+        if len(toks) % bs:
+            tail = hashlib.sha1(
+                h + b"partial:" + toks[(len(toks) // bs) * bs:].tobytes()
+            ).digest()
+        return keys, tail
+
+    def _match_prefix(self, toks: np.ndarray
+                      ) -> Tuple[List[int], int]:
+        """Longest cached chain matching the prompt: the block ids to
+        attach and the token count they cover.  The partial tail block is
+        only shareable when the ENTIRE prompt matches a cached partial
+        chain — a borrower must never scatter its own K/V into a block
+        other rows read."""
+        keys, tail = self._prefix_keys(toks)
+        bids: List[int] = []
+        for key in keys:
+            bid = self._cache_map.get(key)
+            if bid is None:
+                break
+            bids.append(bid)
+        covered = len(bids) * self.block_size
+        if tail is not None and len(bids) == len(keys):
+            bid = self._cache_map.get(tail)
+            if bid is not None:
+                bids.append(bid)
+                covered = len(toks)
+        return bids, covered
+
+    def _register_prefix(self, slot: int, toks: np.ndarray) -> None:
+        """Index the freshly written prompt blocks of ``slot`` so later
+        requests can share them.  Blocks already carrying a key (the
+        attached shared prefix itself) are left as they are."""
+        keys, tail = self._prefix_keys(toks)
+        if tail is not None:
+            keys = keys + [tail]
+        for i, key in enumerate(keys):
+            bid = int(self.block_table[slot, i])
+            if key in self._cache_map or bid in self._block_key:
+                continue
+            self._cache_map[key] = bid
+            self._block_key[bid] = key
+
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefix-cache observability counters (cumulative)."""
+        return {
+            "hit_blocks": self.prefix_hit_blocks,
+            "hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.prefix_cow_copies,
+            "evictions": self.prefix_evictions,
+            "cached_blocks": len(self._cache_map),
+        }
+
+    # ----------------------------------------------------------- preemption
+    def swap_out(self, slot: int) -> Dict[str, Any]:
+        """Preempt a live row: copy its allocated blocks' K/V (and its
+        per-row SSM state) to host memory, then release the row — blocks,
+        reservation and all.  Returns the opaque state :meth:`swap_in`
+        restores.  Shared prefix blocks are copied too (the resumed row
+        comes back fully private — re-sharing after a round trip is a
+        possible follow-up, not a correctness requirement)."""
+        if slot in self._free:
+            raise ValueError(
+                f"{type(self).__name__}.swap_out({slot}): slot is free")
+        n = int(self._nalloc[slot])
+        bids = np.asarray(self.block_table[slot, :n], np.int32)
+        blocks: Dict[str, PyTree] = {}
+        rows: Dict[str, PyTree] = {}
+        for pos_key, c in self.cache.items():
+            if "attn" in c:
+                blocks[pos_key] = jax.tree.map(
+                    lambda leaf: np.asarray(leaf[:, bids]), c["attn"])
+            else:
+                rows[pos_key] = jax.tree.map(
+                    lambda leaf: np.asarray(leaf[:, slot]), c["ssm"])
+        state = {"cache_pos": int(self.cache_pos[slot]), "n_blocks": n,
+                 "attn": blocks, "ssm": rows}
+        self.swap_outs += 1
+        self.release(slot)
+        return state
+
+    def swap_in(self, slot: int, state: Dict[str, Any]) -> None:
+        """Resume a swapped-out request into a freshly taken AND reserved
+        row: allocate as many blocks as it held, scatter the saved
+        contents back, and restore its ``cache_pos``.  The caller's
+        reservation covers the allocation (held blocks <= the lifetime
+        projection the request was re-admitted with), so this cannot
+        fail."""
+        self._require_live([slot])
+        assert self._nalloc[slot] == 0, \
+            f"swap_in({slot}): target row already holds blocks"
+        for _ in range(int(state["n_blocks"])):
+            self._alloc_block(slot)
+        bids = np.asarray(self.block_table[slot, :state["n_blocks"]],
+                          np.int32)
+        new_cache: Dict[str, PyTree] = {}
+        for pos_key, c in self.cache.items():
+            if "attn" in c:
+                new_cache[pos_key] = {"attn": jax.tree.map(
+                    lambda leaf, piece: leaf.at[:, bids].set(
+                        jnp.asarray(piece).astype(leaf.dtype)),
+                    c["attn"], state["attn"][pos_key])}
+            else:
+                new_cache[pos_key] = {"ssm": jax.tree.map(
+                    lambda leaf, piece: leaf.at[:, slot].set(
+                        jnp.asarray(piece).astype(leaf.dtype)),
+                    c["ssm"], state["ssm"][pos_key])}
+        self.cache = new_cache
+        self.cache_pos[slot] = state["cache_pos"]
+        self.swap_ins += 1
 
     # ------------------------------------------------------------- cache I/O
     def write(self, slots: Sequence[int], piece: PyTree,
-              lengths: Sequence[int]) -> None:
+              lengths: Sequence[int],
+              tokens: Optional[Sequence[np.ndarray]] = None) -> None:
         """Install freshly prefilled caches into ``slots``.
 
         ``piece`` is a contiguous (slotted-layout) cache tree with batch
@@ -331,32 +645,58 @@ class BlockPool(_RowPool):
         into each row's (freshly allocated) blocks; Mamba leaves install
         per row.  ``lengths``: per-slot prompt length, i.e. the position
         the first decode step will write.
+
+        ``tokens`` (per-slot prompt ids, required for prefix caching):
+        each prompt is first matched against the content-addressed block
+        index — matched blocks are attached (refcounted) instead of
+        written, only the un-cached suffix is scattered, and the freshly
+        written blocks are indexed for the next request.  Same-prompt
+        requests admitted in ONE batch share too: matching runs per slot
+        in admission order.
         """
         slots = [int(s) for s in slots]
         lengths = [int(n) for n in lengths]
         self._require_live(slots)
-        for s, L in zip(slots, lengths):
+        starts: List[int] = []
+        for j, (s, L) in enumerate(zip(slots, lengths)):
+            start = 0
+            if self.prefix_cache and tokens is not None:
+                toks = np.asarray(tokens[j], np.int32)[:L]
+                bids, covered = self._match_prefix(toks)
+                for bid in bids:
+                    self._attach_block(s, bid)
+                start = covered
+                self.prefix_hit_blocks += len(bids)
+                self.prefix_hit_tokens += covered
             self.alloc_prompt(s, L)
+            if self.prefix_cache and tokens is not None:
+                # index this prompt's blocks NOW (content is scattered
+                # below, before anything reads them) so identical prompts
+                # later in this same batch already share
+                self._register_prefix(s, np.asarray(tokens[j], np.int32)[:L])
+            starts.append(start)
 
         bs = self.block_size
         n_cols = [min(L, self.attn_len) for L in lengths]
         row_idx = np.asarray(slots, np.int32)
 
-        # one scatter per (n_cols group, leaf), vectorised across slots —
-        # a per-slot .at[].set chain would copy the whole pool array once
-        # per slot on the host
-        by_nc: Dict[int, List[int]] = {}
-        for j, nc in enumerate(n_cols):
-            by_nc.setdefault(nc, []).append(j)
+        # one scatter per ((start, n_cols) group, leaf), vectorised across
+        # slots — a per-slot .at[].set chain would copy the whole pool
+        # array once per slot on the host.  ``start`` skips the columns a
+        # shared prefix already holds (start == n_cols: nothing to write).
+        by_seg: Dict[Tuple[int, int], List[int]] = {}
+        for j, (st, nc) in enumerate(zip(starts, n_cols)):
+            if st < nc:
+                by_seg.setdefault((st, nc), []).append(j)
 
         def put_paged(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
-            for nc, js in by_nc.items():
-                cols = np.arange(nc)
+            for (st, nc), js in by_seg.items():
+                cols = np.arange(st, nc)
                 blks = np.stack([self.block_table[slots[j], cols // bs]
-                                 for j in js])              # (nb, nc)
+                                 for j in js])              # (nb, nc-st)
                 offs = np.broadcast_to(cols % bs, blks.shape)
                 pool = pool.at[:, blks, offs].set(
-                    pc[:, np.asarray(js), :nc].astype(pool.dtype))
+                    pc[:, np.asarray(js), st:nc].astype(pool.dtype))
             return pool
 
         def put_rows(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
@@ -386,7 +726,9 @@ class BlockPool(_RowPool):
 
     def peak_kv_bytes(self) -> int:
         """High-watermark of device KV bytes actually holding live pages
-        (+ the per-row SSM state, which is always resident)."""
+        (+ the per-row SSM state, which is always resident).  With prefix
+        caching a block shared by N rows is counted once — the bytes the
+        sharing actually saves."""
         row_bytes = sum(
             leaf.nbytes for c in self.cache.values() if "ssm" in c
             for leaf in jax.tree.leaves(c["ssm"]))

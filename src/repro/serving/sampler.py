@@ -29,6 +29,11 @@ KINDS = ("greedy", "temperature", "top_p")
 
 @dataclass(frozen=True)
 class SamplerConfig:
+    """Token-selection policy: ``greedy`` argmax, ``temperature``
+    softmax, or ``top_p`` nucleus (temperature applies before the
+    nucleus cut).  One frozen config drives both plain decoding and the
+    speculative rejection rule, which is what keeps the two paths
+    distributionally identical."""
     kind: str = "greedy"
     temperature: float = 1.0
     top_p: float = 1.0

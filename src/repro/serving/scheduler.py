@@ -1,17 +1,27 @@
 """Request queue and admission policy for the serving engine.
 
-Requests arrive (open-loop) and wait in a FIFO queue; each engine step the
+Requests arrive (open-loop) and wait in a queue; each engine step the
 scheduler packs waiting requests into free KV-cache slots.  Slots are
 tier-typed — the engine compiles ONE decode step with a static per-slot
 expert-budget vector (premium slots at full k, constrained slots at
-k=1–2), so admission is FIFO *per tier*: a request is placed into the
+k=1–2), so admission is ordered *per tier*: a request is placed into the
 first free slot whose budget matches, and otherwise keeps waiting without
 blocking requests of other tiers behind it.
+
+Two queue orderings:
+
+* ``policy="fifo"`` (default) — arrival order, the PR 3 behaviour.
+* ``policy="slo"`` — earliest-deadline-first: each request's deadline is
+  ``arrival + tier_slo_s[k]`` (its tier's TTFT target); requests whose
+  tier has no target sort last (deadline ``inf``) and stay FIFO among
+  themselves.  Under overload this admits latency-critical tiers ahead
+  of best-effort traffic instead of strict arrival order, and it is the
+  ordering the engine's decode preemption keys victim selection off.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,13 +61,16 @@ class Completion:
     finished: float
     nll_sum: float = 0.0               # teacher-forced NLL (forced mode)
     truncated: bool = False            # slot capacity hit before max_new
+    preemptions: int = 0               # times swapped out mid-decode
 
     @property
     def ttft(self) -> float:
+        """Time to first token: queueing delay + prefill."""
         return self.first_token - self.arrival
 
     @property
     def latency(self) -> float:
+        """End-to-end request latency (arrival to final token)."""
         return self.finished - self.arrival
 
     @property
@@ -67,15 +80,38 @@ class Completion:
 
 @dataclass
 class Scheduler:
-    """FIFO queue + tier-aware slot admission."""
+    """Request queue + tier-aware slot admission (FIFO or EDF order)."""
 
     queue: List[Request] = field(default_factory=list)
+    policy: str = "fifo"               # "fifo" | "slo" (EDF)
+    tier_slo_s: Optional[Dict[Optional[int], float]] = None
+
+    def __post_init__(self) -> None:
+        assert self.policy in ("fifo", "slo"), self.policy
+        if self.policy == "slo":
+            assert self.tier_slo_s, "policy='slo' needs tier_slo_s targets"
 
     def add(self, req: Request) -> None:
+        """Enqueue an arrived request."""
         self.queue.append(req)
 
     def __len__(self) -> int:
         return len(self.queue)
+
+    def deadline(self, req: Request) -> float:
+        """The request's TTFT deadline on the engine clock: arrival plus
+        its tier's SLO target; ``inf`` when the tier has no target (such
+        requests are never considered urgent)."""
+        if not self.tier_slo_s:
+            return float("inf")
+        slo = self.tier_slo_s.get(req.k, float("inf"))
+        return req.arrival + slo
+
+    def _order(self) -> None:
+        """Re-order the queue by the active policy.  EDF sort is stable,
+        so equal deadlines (and untargeted tiers) stay FIFO."""
+        if self.policy == "slo":
+            self.queue.sort(key=self.deadline)
 
     def admit(self, free_slots: Sequence[int],
               slot_k: Sequence[Optional[int]],
@@ -84,11 +120,12 @@ class Scheduler:
         """Pack queued requests into ``free_slots``.
 
         ``slot_k[s]`` is slot ``s``'s static expert budget (None for
-        non-MoE models).  FIFO per tier: each queued request takes the
-        first free slot matching its requested ``k`` (any slot when the
-        request doesn't care); non-matching requests are skipped, not
-        blocked on.  Returns (request, slot) assignments and removes the
-        admitted requests from the queue.
+        non-MoE models).  Queue-order per tier (FIFO, or EDF under
+        ``policy="slo"``): each queued request takes the first free slot
+        matching its requested ``k`` (any slot when the request doesn't
+        care); non-matching requests are skipped, not blocked on.
+        Returns (request, slot) assignments and removes the admitted
+        requests from the queue.
 
         ``can_admit``: optional resource predicate ``(request, slot) ->
         bool`` (the paged engine's projected-block-need + tier-quota
@@ -106,6 +143,7 @@ class Scheduler:
         blocked, so a single tier's quota saturation cannot idle slots
         another tier could have given it.
         """
+        self._order()
         free = list(free_slots)
         assigned: List[Tuple[Request, int]] = []
         remaining: List[Request] = []

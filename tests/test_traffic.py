@@ -1,0 +1,544 @@
+"""Production traffic layer: prefix-cached paged KV, decode preemption,
+SLO-aware admission, per-tier reporting, trace shapes.
+
+Three layers of evidence, mirroring tests/test_paged_kv.py:
+
+* **pool mechanics**: content-addressed block sharing (attach / revive /
+  copy-on-write / adopt / evict) keeps the refcounted free list exact —
+  ``check_invariants`` after every step;
+* **engine differentials**: the full traffic stack (prefix cache + EDF
+  admission + decode preemption) is token-for-token identical to the
+  cold PR 4/5 engine, to the slotted engine, and to solo naive decodes —
+  serving features must be invisible to results;
+* **property suite**: seeded random interleavings of admit / share /
+  decode / truncate / swap-out / swap-in / release hold the
+  used+free==total, no-leak, no-double-free invariants with shared
+  chains in play.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.serving import (BlockPool, Request, Scheduler, ServingEngine,
+                           SpeculativeConfig, WorkloadConfig, make_trace)
+from repro.serving.engine import ServingReport
+from repro.serving.scheduler import Completion
+from repro.models import model as M
+
+from test_serving import naive_decode
+
+CFG = tiny_moe()
+PARAMS = M.init_params(jax.random.PRNGKey(0), CFG)
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_cache():
+    """This module runs last in the alphabetical suite, on top of every
+    executable the earlier modules compiled; shed them first so its own
+    engine/decode compiles don't push the process over the edge on
+    small CI hosts."""
+    jax.clear_caches()
+    yield
+
+
+def _piece(prompts, cache_len, k=2):
+    """A prefill cache tree for ``prompts`` (np (nb, L)) — what the
+    engine hands to ``pool.write``."""
+    _, piece = M.prefill(CFG, PARAMS, jnp.asarray(prompts), k=k,
+                         cache_len=cache_len)
+    return piece
+
+
+def _admit(pool, prompt, proj):
+    """allocate + reserve + write one prompt; returns the slot."""
+    s = pool.allocate()
+    pool.reserve(s, proj)
+    pool.write([s], _piece(prompt[None], pool.slot_len), [len(prompt)],
+               tokens=[prompt])
+    return s
+
+
+# ==========================================================================
+# pool mechanics: sharing, refcounts, CoW, revive, evict
+# ==========================================================================
+
+def test_prefix_sharing_refcounts_and_revival():
+    """Two identical prompts pay the KV once; released blocks revive from
+    the free list with their content intact."""
+    pool = BlockPool(CFG, num_slots=4, slot_len=16, block_size=4,
+                     num_blocks=12, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+
+    s0 = _admit(pool, A, 12)                     # 2 blocks written
+    assert pool.blocks_in_use == 2
+    assert pool.prefix_stats()["hit_tokens"] == 0
+    s1 = _admit(pool, A, 12)                     # both blocks attached
+    assert pool.blocks_in_use == 2               # shared, counted once
+    assert pool.prefix_stats() == {
+        "hit_blocks": 2, "hit_tokens": 8, "cow_copies": 0,
+        "evictions": 0, "cached_blocks": 2}
+    # debt counts owned blocks only: s0 owns 2 of 3 reserved, s1 owns 0
+    assert pool.available_blocks == (12 - 2) - (1 + 3)
+    pool.check_invariants()
+
+    pool.release(s0)
+    assert pool.blocks_in_use == 2               # s1 still reads them
+    pool.release(s1)
+    assert pool.blocks_in_use == 0
+    assert pool.prefix_stats()["cached_blocks"] == 2   # index survives
+
+    s2 = _admit(pool, A, 12)                     # revived out of the free
+    assert pool.blocks_in_use == 2               # list, nothing written
+    assert pool.prefix_stats()["hit_tokens"] == 16
+    assert pool._nshared[s2] == 0                # revival is an OWNED alloc
+    pool.check_invariants()
+
+    # revived content is the original K/V: gather matches a fresh prefill
+    from repro.models.attention import paged_gather
+    want = _piece(A[None], pool.slot_len)
+    for leaf in ("k", "v"):
+        pooled = pool.cache["pos0"]["attn"][leaf]
+        ref = np.asarray(want["pos0"]["attn"][leaf])
+        for p in range(pooled.shape[0]):
+            got = np.asarray(paged_gather(pooled[p], pool.tables(),
+                                          pool.attn_len))
+            np.testing.assert_allclose(got[s2, :8], ref[p, 0, :8])
+
+
+def test_prefix_divergence_attaches_only_the_common_blocks():
+    """A prompt sharing one leading block attaches exactly that block and
+    writes its own suffix."""
+    pool = BlockPool(CFG, num_slots=4, slot_len=16, block_size=4,
+                     num_blocks=12, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    B = A.copy()
+    B[4:] = (B[4:] + 1) % CFG.vocab_size         # diverges at block 1
+
+    s0 = _admit(pool, A, 12)
+    s1 = _admit(pool, B, 12)
+    assert pool.prefix_stats()["hit_tokens"] == 4
+    assert pool.blocks_in_use == 3               # A0(shared), A1, B1
+    assert int(pool.block_table[s0, 0]) == int(pool.block_table[s1, 0])
+    assert int(pool.block_table[s0, 1]) != int(pool.block_table[s1, 1])
+    pool.check_invariants()
+
+
+def test_prefix_partial_tail_shares_only_on_full_prompt_match():
+    """The partial tail block is shareable only when the whole prompt
+    matches — a longer prompt with the same prefix must not read it."""
+    pool = BlockPool(CFG, num_slots=4, slot_len=16, block_size=4,
+                     num_blocks=12, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (6,)).astype(np.int32)   # 1 + tail
+    _admit(pool, A, 12)
+
+    longer = np.concatenate([A, A[:4]]).astype(np.int32)         # 10 toks
+    s1 = _admit(pool, longer, 12)
+    # only the full leading block matched; the tail digest covers A's
+    # whole 6-token prompt, which `longer`'s block 1 does not equal
+    assert pool.prefix_stats()["hit_tokens"] == 4
+    assert pool._nshared[s1] == 1
+    pool.check_invariants()
+
+    exact = _admit(pool, A.copy(), 12)           # full match: tail shared
+    assert pool.prefix_stats()["hit_tokens"] == 4 + 6
+    assert pool._nshared[exact] == 2
+    pool.check_invariants()
+
+
+def test_prefix_copy_on_write_and_adopt():
+    """Appending into a shared partial block copies it while other
+    readers remain — and adopts it in place once they are gone."""
+    pool = BlockPool(CFG, num_slots=4, slot_len=16, block_size=4,
+                     num_blocks=12, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (6,)).astype(np.int32)
+    s0 = _admit(pool, A, 12)                     # owner
+    s1 = _admit(pool, A.copy(), 12)              # borrows block 0 + tail
+    pool.cache_pos[s0] = pool.cache_pos[s1] = 6
+
+    old = int(pool.block_table[s1, 1])
+    pool.prepare_decode([s1])                    # appends INTO shared tail
+    new = int(pool.block_table[s1, 1])
+    assert new != old and pool.prefix_stats()["cow_copies"] == 1
+    assert int(pool.block_table[s0, 1]) == old   # owner untouched
+    # the private copy carries the shared content (positions 4..5)
+    for leaf in ("k", "v"):
+        pooled = np.asarray(pool.cache["pos0"]["attn"][leaf])
+        np.testing.assert_allclose(pooled[:, new, :2], pooled[:, old, :2])
+    pool.check_invariants()
+
+    # owner appends in place: owners never copy (borrowers only read
+    # below the shared span)
+    pool.prepare_decode([s0])
+    assert int(pool.block_table[s0, 1]) == old
+    assert pool.prefix_stats()["cow_copies"] == 1
+
+    # adopt path: a new borrower whose co-readers released
+    s2 = _admit(pool, A.copy(), 12)
+    shared = int(pool.block_table[s2, 1])
+    pool.release(s0), pool.release(s1)
+    assert int(pool._ref[shared]) == 1           # sole referent now
+    pool.cache_pos[s2] = 6
+    pool.prepare_decode([s2])
+    assert int(pool.block_table[s2, 1]) == shared      # no copy
+    assert pool.prefix_stats()["cow_copies"] == 1
+    assert pool._nshared[s2] == 1                # block 0 is still shared
+    pool.check_invariants()
+
+
+def test_prefix_cache_entries_evict_on_reuse():
+    """A generic allocation that pops a cached free block drops its index
+    entry — the cache can never serve stale content."""
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4,
+                     num_blocks=4, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    s0 = _admit(pool, A, 8)                      # 2 blocks cached
+    pool.release(s0)
+    assert pool.prefix_stats()["cached_blocks"] == 2
+
+    B = (A + 1) % CFG.vocab_size
+    big = np.concatenate([B, B]).astype(np.int32)          # 16 tokens
+    s1 = _admit(pool, big, 16)                   # needs all 4 blocks
+    assert pool.prefix_stats()["evictions"] == 2
+    # the evicted entries are gone; big's own 4 blocks are indexed
+    assert pool.prefix_stats()["cached_blocks"] == 4
+    pool.release(s1)
+    s2 = _admit(pool, A, 8)                      # must rewrite, not hit
+    assert pool.prefix_stats()["hit_tokens"] == 0
+    pool.check_invariants(), pool.release(s2)
+
+
+def test_prefix_cache_rejects_ring_caches():
+    with pytest.raises(ValueError, match="linear cache"):
+        BlockPool(tiny_moe(attention_window=6), num_slots=2, slot_len=8,
+                  block_size=4, prefix_cache=True)
+
+
+# ==========================================================================
+# swap-out / swap-in (the preemption primitive)
+# ==========================================================================
+
+def test_swap_roundtrip_restores_blocks_and_frees_everything():
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4,
+                     num_blocks=8, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (6,)).astype(np.int32)
+    s = _admit(pool, A, 12)
+    pool.cache_pos[s] = 6
+    before = {leaf: np.asarray(
+        pool.cache["pos0"]["attn"][leaf][:, pool.block_table[s, :2]])
+        for leaf in ("k", "v")}
+
+    state = pool.swap_out(s)
+    assert pool.blocks_in_use == 0 and pool.available_blocks == 8
+    assert state["cache_pos"] == 6 and state["n_blocks"] == 2
+    pool.check_invariants()
+
+    s2 = pool.allocate()
+    pool.reserve(s2, 12)
+    pool.swap_in(s2, state)
+    assert int(pool.cache_pos[s2]) == 6 and pool.blocks_in_use == 2
+    for leaf in ("k", "v"):
+        after = np.asarray(
+            pool.cache["pos0"]["attn"][leaf][:, pool.block_table[s2, :2]])
+        np.testing.assert_allclose(after, before[leaf])
+    assert pool.swap_outs == 1 and pool.swap_ins == 1
+    pool.check_invariants()
+
+    with pytest.raises(ValueError, match="slot is free"):
+        pool.swap_out(s2 + 1 if s2 == 0 else 0)
+
+
+# ==========================================================================
+# scheduler: EDF under per-tier SLO targets
+# ==========================================================================
+
+def test_scheduler_slo_policy_orders_by_deadline():
+    sched = Scheduler(policy="slo", tier_slo_s={2: 0.1, 1: 10.0})
+    eco = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                  k=1, arrival=0.0)
+    prm = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                  k=2, arrival=0.5)               # deadline 0.6 < 10.0
+    sched.add(eco), sched.add(prm)
+    got = sched.admit([0, 1], [1, 2])
+    assert [(r.rid, s) for r, s in got] == [(1, 1), (0, 0)] \
+        or [r.rid for r, _ in got] == [1, 0]
+    assert sched.deadline(prm) == pytest.approx(0.6)
+    assert sched.deadline(
+        Request(rid=2, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                k=4, arrival=0.0)) == float("inf")   # untargeted tier
+
+
+def test_scheduler_fifo_default_and_slo_validation():
+    sched = Scheduler()                           # FIFO stays the default
+    a = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                k=1, arrival=0.9)
+    b = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                k=1, arrival=0.1)
+    sched.add(a), sched.add(b)
+    assert [r.rid for r, _ in sched.admit([0, 1], [1, 1])] == [0, 1]
+    with pytest.raises(AssertionError):
+        Scheduler(policy="nonsense")
+    with pytest.raises(AssertionError, match="tier_slo_s"):
+        Scheduler(policy="slo")                   # targets are required
+
+
+# ==========================================================================
+# engine differentials: the traffic stack must be invisible to results
+# ==========================================================================
+
+def _shared_prefix_trace(n=8, prefix_len=4, lens=(6, 8), tiers=(1, 2),
+                         new=(2, 4, 5), seed=3):
+    """Closed-batch trace where every prompt opens with one of two fixed
+    prefixes and some prompts repeat exactly."""
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, CFG.vocab_size, (2, prefix_len)) \
+        .astype(np.int32)
+    reqs = []
+    for i in range(n):
+        L = int(rng.choice(lens))
+        p = rng.integers(0, CFG.vocab_size, (L,)).astype(np.int32)
+        p[:prefix_len] = prefixes[i % 2]
+        if i >= n - 2:                            # exact duplicates too
+            p = np.array(reqs[i - 2].prompt, np.int32)
+        reqs.append(Request(rid=i, prompt=p,
+                            max_new_tokens=int(rng.choice(new)),
+                            k=int(tiers[i % len(tiers)])))
+    return reqs
+
+
+def test_traffic_stack_matches_cold_engine_and_slotted():
+    """prefix cache + EDF + preemption == cold paged == slotted, token
+    for token, on a mixed-tier shared-prefix closed batch."""
+    reqs = _shared_prefix_trace()
+    kw = dict(num_slots=4, slot_len=16, slot_k=(2, 2, 1, 1))
+    cold = ServingEngine(CFG, PARAMS, kv_layout="paged", block_size=4,
+                         **kw).run([Request(**vars(r)) for r in reqs])
+    slotted = ServingEngine(CFG, PARAMS, kv_layout="slotted", **kw) \
+        .run([Request(**vars(r)) for r in reqs])
+    traffic_eng = ServingEngine(
+        CFG, PARAMS, kv_layout="paged", block_size=4, prefix_cache=True,
+        preemption=True, slo_ms={2: 50.0, 1: 5000.0}, **kw)
+    traffic = traffic_eng.run([Request(**vars(r)) for r in reqs])
+
+    want = cold.tokens_by_rid()
+    for rep in (slotted, traffic):
+        got = rep.tokens_by_rid()
+        assert got.keys() == want.keys()
+        for rid in want:
+            np.testing.assert_array_equal(want[rid], got[rid])
+    assert traffic.prefix["hit_tokens"] > 0       # sharing really happened
+    traffic_eng.pool.check_invariants()
+    assert traffic_eng.pool.blocks_in_use == 0    # everything released
+
+
+def test_preempted_request_resumes_token_identical():
+    """An economy decode swapped out for an urgent premium request
+    resumes exactly where it stopped — both match their solo runs."""
+    eco_prompt = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    prm_prompt = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    eco_new, prm_new = 40, 4
+    # 14 blocks: the economy request reserves 12, so the premium arrival
+    # (3 blocks) is block-starved until the engine swaps economy out
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=48,
+                        slot_k=(2, 1), kv_layout="paged", block_size=4,
+                        num_blocks=14, preemption=True,
+                        slo_ms={2: 0.0, 1: 60000.0})
+    rep = eng.run([
+        Request(rid=0, prompt=eco_prompt, max_new_tokens=eco_new, k=1,
+                arrival=0.0),
+        Request(rid=1, prompt=prm_prompt, max_new_tokens=prm_new, k=2,
+                arrival=0.02),
+    ])
+    by_rid = {c.rid: c for c in rep.completions}
+    assert rep.preemptions >= 1
+    assert by_rid[0].preemptions >= 1 and by_rid[1].preemptions == 0
+    assert eng.pool.swap_outs == eng.pool.swap_ins == rep.preemptions
+    np.testing.assert_array_equal(
+        by_rid[0].tokens, naive_decode(CFG, PARAMS, eco_prompt[None],
+                                       eco_new, 1)[0])
+    np.testing.assert_array_equal(
+        by_rid[1].tokens, naive_decode(CFG, PARAMS, prm_prompt[None],
+                                       prm_new, 2)[0])
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_prefix_cache_with_speculation_parity():
+    """Speculative rollback into shared tail blocks goes through
+    copy-on-write; duplicate prompts still decode exactly as solo."""
+    prompts = [RNG.integers(0, CFG.vocab_size, (6,)).astype(np.int32)
+               for _ in range(2)]
+    prompts.append(prompts[0].copy())             # exact duplicate
+    new = 6
+    eng = ServingEngine(CFG, PARAMS, num_slots=3, slot_len=16,
+                        slot_k=(2, 2, 2), kv_layout="paged", block_size=4,
+                        prefix_cache=True,
+                        speculative=SpeculativeConfig(window=3, draft_k=1))
+    rep = eng.run([Request(rid=i, prompt=p, max_new_tokens=new, k=2)
+                   for i, p in enumerate(prompts)])
+    got = rep.tokens_by_rid()
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            got[i], naive_decode(CFG, PARAMS, p[None], new, 2)[0])
+    assert rep.prefix["hit_tokens"] > 0
+    eng.pool.check_invariants()
+
+
+def test_engine_rejects_bad_traffic_combos():
+    kw = dict(num_slots=2, slot_len=8, slot_k=(2, 1))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(CFG, PARAMS, kv_layout="slotted",
+                      prefix_cache=True, **kw)
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(CFG, PARAMS, kv_layout="slotted",
+                      preemption=True, slo_ms={1: 1.0}, **kw)
+    with pytest.raises(ValueError, match="slo_ms"):
+        ServingEngine(CFG, PARAMS, kv_layout="paged",
+                      preemption=True, **kw)
+    with pytest.raises(ValueError):
+        ServingEngine(CFG, PARAMS, kv_layout="paged", preemption=True,
+                      slo_ms={1: 1.0},
+                      speculative=SpeculativeConfig(window=2), **kw)
+
+
+# ==========================================================================
+# per-tier report accounting (hand-built completions: exact numbers)
+# ==========================================================================
+
+def _completion(rid, k, arrival, ttft_s, n_tok):
+    return Completion(
+        rid=rid, prompt_len=4, tokens=np.arange(n_tok, dtype=np.int32),
+        k=k, arrival=arrival, admitted=arrival,
+        first_token=arrival + ttft_s, finished=arrival + ttft_s + 0.1)
+
+
+def test_report_per_tier_accounting():
+    cs = ([_completion(i, 2, 0.0, 0.010 * (i + 1), 4) for i in range(4)]
+          + [_completion(10 + i, 1, 0.0, 0.200, 8) for i in range(2)])
+    rep = ServingReport(completions=cs, wall_s=2.0, slo_ms={2: 25.0})
+    tiers = rep.per_tier()
+    assert set(tiers) == {"1", "2"}
+    prm, eco = tiers["2"], tiers["1"]
+    assert prm["n_requests"] == 4 and eco["n_requests"] == 2
+    assert prm["ttft_p50_ms"] == pytest.approx(25.0)   # 10/20/30/40 ms
+    assert prm["ttft_p99_ms"] == pytest.approx(
+        float(np.percentile([10.0, 20.0, 30.0, 40.0], 99)))
+    assert eco["ttft_p50_ms"] == pytest.approx(200.0)
+    assert prm["gen_tokens_per_s"] == pytest.approx(16 / 2.0)
+    assert eco["gen_tokens_per_s"] == pytest.approx(16 / 2.0)
+    assert prm["slo_attainment"] == pytest.approx(0.5)  # 10,20 <= 25ms
+    assert "slo_attainment" not in eco                  # no economy target
+    s = rep.summary()
+    assert s["per_tier"] == tiers and "ttft_p99_ms" in s
+
+
+# ==========================================================================
+# workload generators
+# ==========================================================================
+
+def test_workload_arrival_shapes_deterministic():
+    for arrival in ("poisson", "diurnal", "burst"):
+        wl = WorkloadConfig(n_requests=32, rate=50.0, arrival=arrival,
+                            seed=5)
+        a = [r.arrival for r in make_trace(wl)]
+        b = [r.arrival for r in make_trace(wl)]
+        assert a == b                              # seeded determinism
+        assert a == sorted(a) and a[0] == 0.0
+        assert all(np.isfinite(a))
+    # bursty traffic really clusters: more tight inter-arrivals than
+    # the homogeneous process at the same base rate
+    gaps = lambda wl: np.diff([r.arrival for r in make_trace(wl)])
+    burst = gaps(WorkloadConfig(n_requests=64, rate=20.0, arrival="burst",
+                                burst_factor=16.0, seed=5))
+    flat = gaps(WorkloadConfig(n_requests=64, rate=20.0, seed=5))
+    assert np.median(burst) < np.median(flat)
+    with pytest.raises(AssertionError):
+        make_trace(WorkloadConfig(arrival="weekly"))
+
+
+def test_workload_zipf_lengths_and_shared_prefixes():
+    wl = WorkloadConfig(n_requests=48, length_dist="zipf",
+                        new_tokens=(8, 16), max_new_cap=40,
+                        prompt_lens=(12,), shared_prefix_len=8,
+                        n_shared_prefixes=2, seed=9)
+    trace = make_trace(wl)
+    news = [r.max_new_tokens for r in trace]
+    assert min(news) >= 8 and max(news) <= 40      # floor = min(new_tokens)
+    assert len(set(news)) > 2                      # an actual distribution
+    heads = {tuple(r.prompt[:8]) for r in trace}
+    assert len(heads) <= 2                         # one of two templates
+    tails = {tuple(r.prompt[8:]) for r in trace}
+    assert len(tails) > 2                          # private suffixes vary
+    with pytest.raises(AssertionError):            # prefix must fit
+        make_trace(WorkloadConfig(prompt_lens=(8,), shared_prefix_len=8))
+    with pytest.raises(AssertionError):
+        make_trace(WorkloadConfig(length_dist="gauss"))
+
+
+# ==========================================================================
+# property suite: random interleavings with shared chains
+# ==========================================================================
+
+def _interleave(seed, steps=60):
+    """Random admit/decode/truncate/swap/release against a prefix pool;
+    every step must preserve the refcount/free-list invariants."""
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(CFG, num_slots=3, slot_len=16, block_size=4,
+                     num_blocks=10, prefix_cache=True)
+    templates = [RNG.integers(0, CFG.vocab_size, (L,)).astype(np.int32)
+                 for L in (4, 6, 8)]
+    pieces = {len(t): _piece(t[None], pool.slot_len) for t in templates}
+    active = {}                                    # slot -> (prompt_len, proj)
+    swapped = []                                   # (state, proj)
+    for _ in range(steps):
+        op = rng.choice(["admit", "decode", "truncate", "swap_out",
+                         "swap_in", "release"])
+        if op == "admit" and pool.num_free:
+            t = templates[int(rng.integers(len(templates)))]
+            proj = int(rng.integers(len(t) + 1, 17))
+            if pool.can_admit(proj):
+                s = pool.allocate()
+                pool.reserve(s, proj)
+                pool.write([s], pieces[len(t)], [len(t)], tokens=[t])
+                pool.cache_pos[s] = len(t)
+                active[s] = (len(t), proj)
+        elif op == "decode" and active:
+            s = int(rng.choice(list(active)))
+            if int(pool.cache_pos[s]) < active[s][1]:
+                pool.prepare_decode([s])
+                pool.cache_pos[s] += 1
+        elif op == "truncate" and active:
+            s = int(rng.choice(list(active)))
+            L = active[s][0]
+            if int(pool.cache_pos[s]) > L:
+                pool.truncate_to(
+                    s, int(rng.integers(L, int(pool.cache_pos[s]))))
+        elif op == "swap_out" and active:
+            s = int(rng.choice(list(active)))
+            swapped.append((pool.swap_out(s), active.pop(s)[1]))
+        elif op == "swap_in" and swapped and pool.num_free:
+            state, proj = swapped[-1]
+            if pool.can_admit(proj):
+                swapped.pop()
+                s = pool.allocate()
+                pool.reserve(s, proj)
+                pool.swap_in(s, state)
+                active[s] = (state["cache_pos"], proj)
+        elif op == "release" and active:
+            s = int(rng.choice(list(active)))
+            pool.release(s)
+            del active[s]
+        pool.check_invariants()
+    for s in list(active):
+        pool.release(s)
+        pool.check_invariants()
+    assert pool.blocks_in_use == 0
+    assert pool.available_blocks == pool.num_blocks
+    assert len(pool._free_blocks) == pool.num_blocks
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_prefix_pool_interleavings_seeded(seed):
+    _interleave(seed)

@@ -7,7 +7,13 @@ importable module, or to an attribute reachable from one. Keeps the
 README / docs honest: renaming or deleting a module/function without
 updating the docs fails CI.
 
-Usage:  PYTHONPATH=src python tools/docs_check.py README.md docs/*.md
+``--flags FILE=MODULE:FUNC`` additionally checks every ``--long-flag``
+token the file mentions against the argparse parser built by
+``MODULE.FUNC()`` — so the operations guide cannot document a launcher
+flag that does not exist (docs/serving.md vs repro.launch.serve).
+
+Usage:  PYTHONPATH=src python tools/docs_check.py README.md docs/*.md \\
+            --flags docs/serving.md=repro.launch.serve:build_parser
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
 FROM_IMPORT = re.compile(
     r"^\s*from\s+(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)*)\s+import\s+([\w ,]+)",
     re.MULTILINE)
+# long CLI flags as the docs write them: --kv-layout, --slo-ms 8:250, ...
+CLI_FLAG = re.compile(r"(?<![\w-])(--[a-z][a-z0-9-]+)\b")
 
 
 def resolve(dotted: str) -> Tuple[bool, str]:
@@ -60,19 +68,52 @@ def check_file(path: str) -> List[str]:
     return errors
 
 
+def check_flags(path: str, target: str) -> List[str]:
+    """Every ``--flag`` mentioned in ``path`` must be an option of the
+    argparse parser built by ``target`` (``MODULE:FUNC``)."""
+    mod_name, func_name = target.split(":")
+    parser = getattr(importlib.import_module(mod_name), func_name)()
+    known = {opt for action in parser._actions
+             for opt in action.option_strings}
+    text = open(path).read()
+    errors = []
+    for flag in sorted(set(CLI_FLAG.findall(text))):
+        if flag not in known:
+            errors.append(
+                f"{path}: `{flag}` is not an option of {target}()")
+    return errors
+
+
 def main(argv: List[str]) -> int:
-    if not argv:
-        print("usage: docs_check.py FILE.md [FILE.md ...]", file=sys.stderr)
+    flag_checks: List[Tuple[str, str]] = []
+    paths: List[str] = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--flags":
+            spec = next(it, None)
+            if spec is None or "=" not in spec or ":" not in spec:
+                print("--flags needs FILE=MODULE:FUNC", file=sys.stderr)
+                return 2
+            path, target = spec.split("=", 1)
+            flag_checks.append((path, target))
+        else:
+            paths.append(arg)
+    if not paths and not flag_checks:
+        print("usage: docs_check.py FILE.md [FILE.md ...] "
+              "[--flags FILE=MODULE:FUNC]", file=sys.stderr)
         return 2
     errors = []
     checked = 0
-    for path in argv:
+    for path in paths:
         errs = check_file(path)
         errors.extend(errs)
         checked += 1
+    for path, target in flag_checks:
+        errors.extend(check_flags(path, target))
     for e in errors:
         print(f"FAIL {e}")
     print(f"docs-check: {checked} file(s), "
+          f"{len(flag_checks)} flag check(s), "
           f"{'OK' if not errors else f'{len(errors)} broken reference(s)'}")
     return 1 if errors else 0
 
