@@ -11,14 +11,16 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:
 	$(PYTHON) -m pytest -q --durations=15
 
-# tier-1 under coverage + the kernels/serving line-coverage floor
+# tier-1 under coverage + the kernels/serving/obs line-coverage floor
 # (mirrors the CI coverage job; needs pytest-cov from requirements-ci.txt)
 coverage:
 	$(PYTHON) -m pytest -q --cov=repro --cov-report=xml --cov-report=term
 	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 \
-		repro/kernels repro/serving \
+		repro/kernels repro/serving repro/obs \
 		repro/serving/sampler.py repro/serving/speculative.py \
-		repro/serving/kv_cache.py repro/serving/scheduler.py
+		repro/serving/kv_cache.py repro/serving/scheduler.py \
+		repro/obs/trace.py repro/obs/metrics.py \
+		repro/obs/expert_load.py
 
 # the long-running randomized stress subset (CI runs it in the smoke job)
 test-slow:
@@ -36,8 +38,9 @@ bench-round:
 bench-serve:
 	$(PYTHON) -m benchmarks.run serving
 
-# the fast CI subset (kernel micro-bench + backend bench + serving smoke),
-# JSON results written to bench-smoke.json (the CI artifact)
+# the fast CI subset (kernel micro-bench + backend bench + serving smoke
+# + the telemetry overhead guard), JSON results written to
+# bench-smoke.json (the CI artifact)
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --smoke --out bench-smoke.json
 
@@ -45,8 +48,9 @@ bench-smoke:
 # serving ops guide's launcher flags are checked against the real parser
 docs-check:
 	$(PYTHON) tools/docs_check.py README.md docs/architecture.md \
-		docs/kernels.md docs/serving.md \
-		--flags docs/serving.md=repro.launch.serve:build_parser
+		docs/kernels.md docs/serving.md docs/observability.md \
+		--flags docs/serving.md=repro.launch.serve:build_parser \
+		--flags docs/observability.md=repro.launch.serve:build_parser
 
 # every PR must commit its CHANGES.md entry (CI runs --base origin/main)
 changes-check:

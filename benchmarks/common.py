@@ -152,6 +152,12 @@ def run_setting(method: str, *, budget: Optional[str] = None,
 # benchmarks.run --smoke --out.
 RESULTS: List[Dict] = []
 
+# benchmarks/telemetry_bench.py drops one entry per scenario here
+# (decode-step p50, prefix hit rate, expert gini + the full registry
+# snapshot); the runner writes it as the artifact's "telemetry" block so
+# BENCH JSON files accumulate a perf trajectory across PRs.
+TELEMETRY: Dict[str, Dict] = {}
+
 
 def emit(name: str, rows: List[Dict], keys: List[str]) -> None:
     """CSV block: header + rows, prefixed with the benchmark name."""

@@ -21,7 +21,8 @@ import time
 
 from . import (backend_bench, common, fig2_activation, fig3_temperature,
                kernel_bench, round_engine_bench, serving_bench, table1_flops,
-               table2_budgets, table3_scale, table4_sampling, table5_rescaler)
+               table2_budgets, table3_scale, table4_sampling, table5_rescaler,
+               telemetry_bench)
 
 ALL = {
     "table1": table1_flops.run,
@@ -35,10 +36,11 @@ ALL = {
     "backend": backend_bench.run,
     "round_engine": round_engine_bench.run,
     "serving": serving_bench.run,
+    "telemetry": telemetry_bench.run,
 }
 
 # CPU-fast subset for CI (`--smoke`): no pretraining, no federated rounds
-SMOKE = ["kernels", "backend", "serving"]
+SMOKE = ["kernels", "backend", "serving", "telemetry"]
 
 
 def main(argv=None) -> None:
@@ -66,9 +68,12 @@ def main(argv=None) -> None:
     wall = time.time() - t0
     print(f"\n# all benchmarks done in {wall:.1f}s")
     if ns.out:
+        payload = {"benchmarks": picks, "wall_s": round(wall, 2),
+                   "results": common.RESULTS}
+        if common.TELEMETRY:
+            payload["telemetry"] = common.TELEMETRY
         with open(ns.out, "w") as f:
-            json.dump({"benchmarks": picks, "wall_s": round(wall, 2),
-                       "results": common.RESULTS}, f, indent=1)
+            json.dump(payload, f, indent=1)
         print(f"# wrote {len(common.RESULTS)} rows to {ns.out}")
 
 

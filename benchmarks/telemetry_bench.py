@@ -1,0 +1,162 @@
+"""Telemetry overhead guard + per-scenario telemetry rows.
+
+The observability layer (``repro.obs``) is opt-in-pay: an engine built
+without a tracer/registry holds ``NULL_TRACER`` and every hot-path call
+site guards on one attribute load, so a disabled engine runs the same
+decode loop the pre-telemetry engine did.  The pre-PR binary is not
+available at bench time, so the guard measures the bound from the other
+side: it runs the SAME workload through a default engine ("off") and a
+fully instrumented one ("traced": span tracer + metrics registry +
+per-step expert-occupancy counts), interleaved min-of-N, and asserts
+the *enabled* decode step lands within ``max(2%, 0.1 ms)`` of the
+disabled one.  The disabled path's residual cost (the ``if
+tracer.enabled`` guards plus one histogram observe per step) is a
+strict subset of the enabled path's host work, so holding the enabled
+path under the 2% line bounds the disabled path well under it.
+
+Also emits the ``serving_telemetry`` rows the smoke artifact carries
+per scenario: decode-step p50, prefix hit rate, expert-occupancy gini.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.obs import MetricsRegistry, Tracer
+from repro.serving import Request, ServingEngine, WorkloadConfig, make_trace
+
+from . import common
+from .common import bench_model, emit
+
+OVERHEAD_PCT = 0.02     # relative slack for the enabled/disabled ratio
+OVERHEAD_MS = 0.1       # absolute floor: timer + host-sched noise
+
+
+def _trace(cfg, n, seed):
+    # shared 8-token prefixes so the prefix cache has something to hit
+    return make_trace(WorkloadConfig(
+        n_requests=n, prompt_lens=(16,), new_tokens=(16,),
+        shared_prefix_len=8, n_shared_prefixes=2,
+        tier_mix=((cfg.moe.top_k, 0.5), (1, 0.5)),
+        vocab_size=cfg.vocab_size, seed=seed))
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, k=r.k) for r in reqs]
+
+
+def run(smoke: bool = False) -> None:
+    cfg = bench_model(moe=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    top_k = cfg.moe.top_k
+    n_req = 16 if smoke else 32
+    repeats = 3 if smoke else 5
+    reqs = _trace(cfg, n_req, seed=3)
+    prompt_tokens = sum(r.prompt_len for r in reqs)
+
+    kw = dict(num_slots=8, slot_len=32, slot_k=(top_k,) * 4 + (1,) * 4,
+              kv_layout="paged", block_size=8, num_blocks=48,
+              prefix_cache=True)
+    scenarios = [
+        ("off", {}),
+        ("traced", {"tracer": Tracer(), "metrics": MetricsRegistry(),
+                    "expert_telemetry": True}),
+    ]
+    engines = {}
+    for name, extra in scenarios:
+        eng = ServingEngine(cfg, params, **kw, **extra)
+        eng.run(_clone(_trace(cfg, n_req, seed=4)))   # compile + warmup
+        engines[name] = eng
+
+    # interleaved best-of-N: host noise at bench scale is sustained, so
+    # back-to-back blocks would hand whichever engine ran in the quiet
+    # minute the win.  Per-repeat mins are kept so the guard can compare
+    # ADJACENT off/traced pairs (both saw the same load) instead of two
+    # global mins that may come from differently-loaded minutes.
+    per_rep = {name: [] for name, _ in scenarios}
+    last = {}
+    for _ in range(repeats):
+        for name, _ in scenarios:
+            eng = engines[name]
+            for c in ("prefix_hit_blocks", "prefix_hit_tokens",
+                      "prefix_cow_copies", "prefix_evictions"):
+                setattr(eng.pool, c, 0)
+            rep = eng.run(_clone(reqs))
+            per_rep[name].append(float(np.min(rep.decode_step_s)) * 1e3)
+            last[name] = rep
+    step_ms = {name: min(v) for name, v in per_rep.items()}
+
+    rows = []
+    stats = {}
+    for name, _ in scenarios:
+        rep = last[name]
+        s = rep.summary()
+        el = rep.expert_load or {}
+        hit_rate = (rep.prefix.get("hit_tokens", 0) / prompt_tokens
+                    if rep.prefix else 0.0)
+        tracer = engines[name]._tracer
+        row = {"scenario": name,
+               "decode_step_ms_min": step_ms[name],
+               "decode_step_ms_p50": s["decode_step_ms_p50"],
+               "prefix_hit_rate": hit_rate,
+               "expert_gini": el.get("gini"),
+               "expert_entropy": el.get("entropy"),
+               "trace_events": len(tracer.events)}
+        rows.append(row)
+        stats[name] = {k: v for k, v in row.items() if k != "scenario"}
+        # the artifact's "telemetry" block: headline numbers + the full
+        # registry snapshot (None for the uninstrumented engine)
+        metrics = engines[name]._metrics
+        common.TELEMETRY[name] = dict(
+            stats[name], registry=metrics.snapshot() if metrics else None)
+    emit("serving_telemetry", rows,
+         ["scenario", "decode_step_ms_min", "decode_step_ms_p50",
+          "prefix_hit_rate", "expert_gini", "expert_entropy",
+          "trace_events"])
+
+    # ---- the guard ----
+    off_eng = engines["off"]
+    if off_eng._tracer.enabled or len(off_eng._tracer.events):
+        raise SystemExit("telemetry guard: the default engine must hold "
+                         "the null tracer and emit zero events")
+    if engines["traced"]._tracer.dropped == 0 \
+            and not engines["traced"]._tracer.events:
+        raise SystemExit("telemetry guard: the traced engine emitted no "
+                         "events — instrumentation is dead")
+    # the quietest adjacent pair decides: a loaded CI host inflates both
+    # engines of a repeat together, so the per-repeat delta is stable
+    # where a global-min comparison flakes
+    best_delta = min(t - o for o, t in zip(per_rep["off"],
+                                           per_rep["traced"]))
+    budget = step_ms["off"] * OVERHEAD_PCT + OVERHEAD_MS
+    ok = best_delta <= budget
+    ratio = (step_ms["off"] + best_delta) / max(step_ms["off"], 1e-9)
+    verdict = "within" if ok else "EXCEEDS"
+    print(f"# CLAIM telemetry: fully-enabled tracing+metrics+expert "
+          f"counts adds {best_delta:+.3f} ms to the "
+          f"{step_ms['off']:.3f} ms disabled decode step "
+          f"({ratio:.3f}x, quietest interleaved pair) — {verdict} the "
+          f"max({OVERHEAD_PCT:.0%}, {OVERHEAD_MS} ms) budget; the "
+          f"disabled path's residual cost is a strict subset, so "
+          f"telemetry off costs less still")
+    print("# BENCH JSON: " + json.dumps(
+        {"bench": "telemetry", "requests": n_req, "repeats": repeats,
+         "telemetry": stats, "overhead_ratio": ratio,
+         "overhead_ms": best_delta, "budget_ms": budget, "guard_ok": ok}))
+    if not ok:
+        raise SystemExit(
+            f"telemetry overhead guard failed: enabled decode step "
+            f"runs {best_delta:.3f} ms over disabled in the quietest "
+            f"pair > budget {budget:.3f} ms "
+            f"(disabled {step_ms['off']:.3f} ms)")
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    run()
+    print(f"# telemetry bench done in {time.time() - t0:.1f}s")

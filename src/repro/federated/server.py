@@ -37,6 +37,9 @@ from ..checkpoint import io as ckpt_io
 from ..configs.base import FederatedConfig, ModelConfig, TrainConfig
 from ..core import aggregation as agg
 from ..core import lora as lora_lib
+from ..obs.expert_load import ActivationDriftTracker
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL_TRACER, PID_FEDERATED, Tracer
 from . import client as client_lib
 from .cohort import build_cohorts
 
@@ -54,14 +57,29 @@ class RoundResult:
     client_losses: List[float]
     client_freqs: List[Dict[str, np.ndarray]]
     participating: List[int]
+    # per-MoE-position activation telemetry for the round (repro.obs):
+    # {pos: {"entropy": [per period], "entropy_mean": f, "l1_drift": f|None}}
+    # — l1_drift is None on the first observed round (nothing to diff)
+    activation_drift: Optional[Dict[str, Dict[str, Any]]] = None
 
 
 class FederatedServer:
-    """Holds the global LoRA state and runs communication rounds."""
+    """Holds the global LoRA state and runs communication rounds.
+
+    ``tracer``/``metrics`` (optional, repro.obs): per-round spans
+    (distribute → cohort_update/local_train → aggregate, on the
+    federated track) and round metrics (round counter, mean client
+    loss, per-position activation entropy + L1 drift).  Activation
+    drift itself is always computed — it is host-side arithmetic on
+    arrays each round already produced — and stored on
+    :class:`RoundResult`.
+    """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, global_lora: PyTree,
                  clients: Sequence[client_lib.ClientState],
-                 fed: FederatedConfig, tc: TrainConfig):
+                 fed: FederatedConfig, tc: TrainConfig,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.params = params
         self.global_lora = global_lora
@@ -71,6 +89,15 @@ class FederatedServer:
         self.history: List[RoundResult] = []
         self._rng = np.random.default_rng(fed.seed + 999)
         self._round_offset = 0        # rounds completed before a resume
+        self._drift = ActivationDriftTracker()
+        self._metrics = metrics
+        self._set_tracer(tracer)
+
+    def _set_tracer(self, tracer: Optional[Tracer]) -> None:
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        if self._tracer.enabled:
+            self._tracer.process_name(PID_FEDERATED, "federated")
+            self._tracer.thread_name(PID_FEDERATED, 0, "rounds")
 
     # ----------------------------------------------------------- distribution
     def _dist_rank(self, c: client_lib.ClientState) -> int:
@@ -127,26 +154,67 @@ class FederatedServer:
                       .tolist())
 
     def run_round(self, round_idx: int) -> RoundResult:
+        tr = self._tracer
+        t0 = tr.now()
         if self.fed.round_engine == "looped":
-            return self._run_round_looped(round_idx)
-        return self._run_round_batched(round_idx)
+            res = self._run_round_looped(round_idx)
+        else:
+            res = self._run_round_batched(round_idx)
+        res.activation_drift = self._round_drift(res)
+        if tr.enabled:
+            tr.complete(f"round {round_idx}", t0, tr.now(),
+                        pid=PID_FEDERATED, cat="federated",
+                        args={"participants": len(res.participating),
+                              "method": self.fed.method})
+        if self._metrics is not None:
+            self._metrics.counter("fed.rounds").inc()
+            finite = [l for l in res.client_losses if np.isfinite(l)]
+            if finite:
+                self._metrics.gauge("fed.round.mean_loss").set(
+                    float(np.mean(finite)))
+            self._metrics.gauge("fed.participants").set(
+                len(res.participating))
+            self._drift.publish(self._metrics, res.activation_drift)
+        return res
+
+    def _round_drift(self, res: RoundResult) -> Dict[str, Dict[str, Any]]:
+        """Population activation signal for the round: the unweighted
+        mean of participating clients' activation frequencies per MoE
+        position (aggregation itself weighs by dataset size; telemetry
+        tracks what the cohort as a whole routed), pushed through the
+        drift tracker — entropy per period + L1 drift vs the previous
+        round."""
+        freqs = [f for f in res.client_freqs if f]
+        if not freqs:
+            return {}
+        mean = {pos: np.mean([np.asarray(f[pos], np.float64)
+                              for f in freqs], axis=0)
+                for pos in freqs[0]}
+        return self._drift.update(mean)
 
     def _run_round_looped(self, round_idx: int) -> RoundResult:
         """Sequential reference path: one local_train call per client."""
         parts = self._sample_participants()
+        tr = self._tracer
         loras, freqs, sizes, losses = [], [], [], []
         for i in parts:
             c = self.clients[i]
-            dist = self._distribute(c)
-            trained, f, _, info = client_lib.local_train(
-                self.cfg, self.params, dist, c, self.tc,
-                round_seed=self.fed.seed * 1000 + round_idx)
+            with tr.span("distribute", pid=PID_FEDERATED, cat="federated",
+                         args={"client": i}):
+                dist = self._distribute(c)
+            with tr.span("local_train", pid=PID_FEDERATED, cat="federated",
+                         args={"client": i, "k": c.k}):
+                trained, f, _, info = client_lib.local_train(
+                    self.cfg, self.params, dist, c, self.tc,
+                    round_seed=self.fed.seed * 1000 + round_idx)
             loras.append(trained)
             freqs.append(f)
             sizes.append(float(c.dataset_size))
             losses.append(info["mean_loss"])
 
-        self.global_lora = self._aggregate(loras, freqs, sizes, parts)
+        with tr.span("aggregate", pid=PID_FEDERATED, cat="federated",
+                     args={"method": self.fed.method}):
+            self.global_lora = self._aggregate(loras, freqs, sizes, parts)
         res = RoundResult(round_idx, losses, freqs, parts)
         self.history.append(res)
         return res
@@ -167,22 +235,31 @@ class FederatedServer:
         # FLAME: cohort-stacked trees, concatenated on the client axis below
         stacked_loras, stacked_freqs, stacked_order = [], [], []
 
-        for co in cohorts:
+        tr = self._tracer
+        for ci, co in enumerate(cohorts):
             members = [part_clients[i] for i in co.members]
-            trainables = [lora_lib.make_trainable(self._distribute(c),
-                                                  c.rescaler)
-                          for c in members]
-            stacked_tr = lora_lib.stack_adapters(trainables)
-            plan = client_lib.stack_plans(
-                [client_lib.make_batch_plan(c, self.tc, round_seed)
-                 for c in members])
+            with tr.span("distribute", pid=PID_FEDERATED, cat="federated",
+                         args={"cohort": ci, "clients": len(members)}):
+                trainables = [lora_lib.make_trainable(self._distribute(c),
+                                                      c.rescaler)
+                              for c in members]
+                stacked_tr = lora_lib.stack_adapters(trainables)
+                plan = client_lib.stack_plans(
+                    [client_lib.make_batch_plan(c, self.tc, round_seed)
+                     for c in members])
             rescaler_trainable = (co.key[4] == "learnable")
-            out_tr, counts, tok, loss_sum, n_valid = client_lib.cohort_update(
-                self.cfg, self.params, stacked_tr,
-                jnp.asarray(plan.tokens), jnp.asarray(plan.labels),
-                jnp.asarray(plan.mask), jnp.asarray(plan.valid),
-                k=co.k, tc=self.tc, rescaler_trainable=rescaler_trainable,
-                backend=self.fed.cohort_backend)
+            with tr.span("cohort_update", pid=PID_FEDERATED,
+                         cat="federated",
+                         args={"cohort": ci, "k": co.k,
+                               "clients": len(members)}):
+                out_tr, counts, tok, loss_sum, n_valid = \
+                    client_lib.cohort_update(
+                        self.cfg, self.params, stacked_tr,
+                        jnp.asarray(plan.tokens), jnp.asarray(plan.labels),
+                        jnp.asarray(plan.mask), jnp.asarray(plan.valid),
+                        k=co.k, tc=self.tc,
+                        rescaler_trainable=rescaler_trainable,
+                        backend=self.fed.cohort_backend)
 
             # stacked activation frequencies {pos: (C, n_periods, E)}
             denom = jnp.maximum(tok, 1.0)[:, None, None]
@@ -217,22 +294,27 @@ class FederatedServer:
                                                      out_tr["lora"])
 
         sizes = [float(c.dataset_size) for c in part_clients]
-        if self.fed.method == "flame":
-            # concatenate cohorts on the client axis — still device-resident
-            cat = (stacked_loras[0] if len(stacked_loras) == 1 else
-                   jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
-                                *stacked_loras))
-            cat_freqs = {pos: jnp.concatenate([f[pos] for f in stacked_freqs],
-                                              axis=0)
-                         for pos in (stacked_freqs[0] if stacked_freqs
-                                     else {})}
-            cat_sizes = [sizes[pos] for pos in stacked_order]
-            self.global_lora = self._aggregate(cat, cat_freqs, cat_sizes,
-                                               parts)
-        else:
-            loras = [loras_by_pos[i] for i in range(len(parts))]
-            freqs_l = [freqs_by_pos[i] for i in range(len(parts))]
-            self.global_lora = self._aggregate(loras, freqs_l, sizes, parts)
+        with tr.span("aggregate", pid=PID_FEDERATED, cat="federated",
+                     args={"method": self.fed.method}):
+            if self.fed.method == "flame":
+                # concatenate cohorts on the client axis — still
+                # device-resident
+                cat = (stacked_loras[0] if len(stacked_loras) == 1 else
+                       jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                    *stacked_loras))
+                cat_freqs = {pos: jnp.concatenate([f[pos]
+                                                   for f in stacked_freqs],
+                                                  axis=0)
+                             for pos in (stacked_freqs[0] if stacked_freqs
+                                         else {})}
+                cat_sizes = [sizes[pos] for pos in stacked_order]
+                self.global_lora = self._aggregate(cat, cat_freqs, cat_sizes,
+                                                   parts)
+            else:
+                loras = [loras_by_pos[i] for i in range(len(parts))]
+                freqs_l = [freqs_by_pos[i] for i in range(len(parts))]
+                self.global_lora = self._aggregate(loras, freqs_l, sizes,
+                                                   parts)
 
         res = RoundResult(round_idx,
                           [losses_by_pos[i] for i in range(len(parts))],
@@ -278,18 +360,34 @@ class FederatedServer:
         return start
 
     def run(self, resume_from: Optional[str] = None,
-            checkpoint_to: Optional[str] = None) -> List[RoundResult]:
+            checkpoint_to: Optional[str] = None,
+            metrics_to: Optional[str] = None,
+            trace_to: Optional[str] = None) -> List[RoundResult]:
         """Run (the remaining) rounds.
 
         ``resume_from``: checkpoint path written by :meth:`save_checkpoint`
         (or by a previous ``run(checkpoint_to=...)``) — loads (global LoRA,
         rescalers, round idx) and continues from there;
         ``checkpoint_to``: write a checkpoint after every completed round.
+
+        ``metrics_to``/``trace_to``: observability outputs — a registry
+        snapshot (JSON) and a Chrome trace-event file of the round spans,
+        written when the rounds finish.  Each creates the corresponding
+        repro.obs object on demand when the server was constructed
+        without one.
         """
+        if metrics_to and self._metrics is None:
+            self._metrics = MetricsRegistry()
+        if trace_to and not self._tracer.enabled:
+            self._set_tracer(Tracer())
         start = self.restore_checkpoint(resume_from) if resume_from else 0
         out = []
         for r in range(start, self.fed.rounds):
             out.append(self.run_round(r))
             if checkpoint_to:
                 self.save_checkpoint(checkpoint_to)
+        if metrics_to:
+            self._metrics.dump(metrics_to)
+        if trace_to:
+            self._tracer.dump(trace_to)
         return out

@@ -29,6 +29,7 @@ import jax
 from ..configs.base import INPUT_SHAPES
 from ..configs.registry import get_config
 from ..models import model as model_lib
+from ..obs import MetricsRegistry, Tracer
 from ..serving import (ServingEngine, SpeculativeConfig, WorkloadConfig,
                        make_trace)
 from . import steps as steps_lib
@@ -158,6 +159,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mix", default="",
                     help="tier mix k:frac[,k:frac...] (FLAME adaptive-k); "
                          "empty = full top_k everywhere")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(request lifecycle + engine-loop spans; open in "
+                         "Perfetto).  Also arms the flight recorder: on an "
+                         "engine exception the trace ring is dumped to "
+                         "PATH.crash.json (repro.obs.trace)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a metrics-registry JSON snapshot after the "
+                         "run: engine counters, step-time histograms, KV "
+                         "pool / scheduler gauges (repro.obs.metrics)")
+    ap.add_argument("--expert-telemetry", action="store_true",
+                    help="per-decode-step expert activation counts, "
+                         "host-side: occupancy histogram, gini/entropy, "
+                         "hot expert in the report (MoE archs, not with "
+                         "--speculate)")
     ap.add_argument("--multi-pod", action="store_true")
     return ap
 
@@ -224,6 +240,12 @@ def main() -> None:
             raise SystemExit(f"--speculate needs an MoE arch: {cfg.name} "
                              "has no cheaper draft budget")
         spec = SpeculativeConfig(window=args.window, draft_k=args.draft_k)
+    tracer = (Tracer(flight_path=f"{args.trace_out}.crash.json")
+              if args.trace_out else None)
+    registry = MetricsRegistry() if args.metrics_out else None
+    if args.expert_telemetry and not cfg.moe.enabled:
+        raise SystemExit(f"--expert-telemetry needs an MoE arch: "
+                         f"{cfg.name} routes nothing to observe")
     engine = ServingEngine(cfg, params, num_slots=args.slots,
                            slot_len=args.slot_len, slot_k=slot_k,
                            kv_layout=args.kv_layout,
@@ -233,7 +255,9 @@ def main() -> None:
                            speculative=spec,
                            prefix_cache=args.prefix_cache,
                            preemption=args.preemption,
-                           slo_ms=slo)
+                           slo_ms=slo,
+                           tracer=tracer, metrics=registry,
+                           expert_telemetry=args.expert_telemetry)
     pool_desc = (f"{engine.pool.num_blocks} x {engine.pool.block_size}"
                  f"-token KV blocks" if engine.paged
                  else "slotted KV pool")
@@ -251,6 +275,12 @@ def main() -> None:
     for key, val in report.summary().items():
         print(f"  {key}: {val:.2f}" if isinstance(val, float)
               else f"  {key}: {val}")
+    if tracer is not None:
+        print(f"trace: {tracer.dump(args.trace_out)} "
+              f"({len(tracer.events)} events — open in Perfetto)")
+    if registry is not None:
+        registry.dump(args.metrics_out)
+        print(f"metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

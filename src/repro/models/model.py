@@ -451,7 +451,8 @@ def init_paged_cache(cfg, num_slots: int, num_blocks: int,
 
 def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                 num_groups=1, slot_mask=None, block_table=None,
-                page_span=None, no_drop=False, dispatch=None):
+                page_span=None, no_drop=False, dispatch=None,
+                return_counts=False):
     """One decode step.  tokens: (B,S) or (B,S,K); pos: scalar int, or a
     (B,) vector of per-row positions — the serving engine's slotted decode,
     where every cache slot sits at a different depth (serving/engine.py).
@@ -475,7 +476,12 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
     (:func:`repro.models.moe_layer.apply_moe`): ``dispatch`` is one of
     ``"capacity"``/``"dense"``/``"ragged"``; ``no_drop=True`` is the
     legacy spelling of ``dispatch="dense"``.
-    Returns (logits (B,S,V[,K]), new_cache)."""
+    Returns (logits (B,S,V[,K]), new_cache), or with
+    ``return_counts=True`` (logits, new_cache, counts) where ``counts``
+    is ``{posN: (n_periods, E)}`` per-expert activation counts for this
+    step — the router already computes them (``MoEAux``), so surfacing
+    them costs one small extra output, no kernel changes
+    (repro.obs.expert_load consumes these host-side)."""
     dispatch = moe_mod.resolve_dispatch(dispatch, no_drop)
     x = embed_tokens(params, cfg, tokens)
     B, S = x.shape[0], x.shape[1]
@@ -488,7 +494,10 @@ def decode_step(cfg, params, cache, tokens, pos, *, trainable=None, k=None,
                         block_table=block_table, page_span=page_span,
                         dispatch=dispatch)
     h = rms_norm(params["final_norm"], h, cfg.rms_eps)
-    return lm_head(params, cfg, h), ys["cache"]
+    logits = lm_head(params, cfg, h)
+    if return_counts:
+        return logits, ys["cache"], ys.get("counts", {})
+    return logits, ys["cache"]
 
 
 def draft_window(cfg, params, cache, tok0, pos, keys, *, sample_fn,

@@ -1,0 +1,32 @@
+"""Observability layer: span tracing, a metrics registry, and
+expert-load telemetry.
+
+Three small, dependency-free modules that the serving engine, the
+scheduler, the paged KV pool, and the federated server publish into:
+
+* :mod:`repro.obs.trace` — request-lifecycle / federated-round span
+  tracer exporting Chrome trace-event JSON (open in Perfetto), with a
+  bounded flight-recorder ring buffer dumped on engine exceptions.
+* :mod:`repro.obs.metrics` — counters, gauges, and fixed-bucket
+  histograms behind a :class:`MetricsRegistry` with a JSON-safe
+  ``snapshot()``; pull-style sources let stateful components
+  (``BlockPool``, ``Scheduler``) be sampled at snapshot time.
+* :mod:`repro.obs.expert_load` — per-decode-step expert occupancy
+  derived host-side from router activation counts, plus per-round
+  activation-frequency entropy / L1-drift tracking for federated runs.
+
+Everything is opt-in-pay: the engine defaults to ``NULL_TRACER`` and no
+registry, and the hot loop guards every telemetry call behind a single
+attribute check.
+"""
+from repro.obs.expert_load import (ActivationDriftTracker, ExpertLoadTracker,
+                                   entropy, gini)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               exp_buckets)
+from repro.obs.trace import NULL_TRACER, Tracer, validate_chrome_trace
+
+__all__ = [
+    "ActivationDriftTracker", "Counter", "ExpertLoadTracker", "Gauge",
+    "Histogram", "MetricsRegistry", "NULL_TRACER", "Tracer", "entropy",
+    "exp_buckets", "gini", "validate_chrome_trace",
+]

@@ -74,6 +74,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as model_lib
+from ..obs.expert_load import ExpertLoadTracker
+from ..obs.metrics import Histogram, MetricsRegistry
+from ..obs.trace import NULL_TRACER, PID_ENGINE, PID_REQUESTS, Tracer
 from .kv_cache import BlockPool, SlotPool
 from .sampler import SamplerConfig, sample_token
 from .scheduler import Completion, Request, Scheduler
@@ -112,6 +115,15 @@ class _ActiveSlot:
     # times this request was swapped out mid-decode; capped by the
     # engine's max_preemptions so repeated preemption cannot livelock
     preemptions: int = 0
+    # engine time of the most recent swap-out (tracer: the swapped_out
+    # span runs from here to the swap_in that resumes the request)
+    swap_t: float = 0.0
+
+
+def _pct_ms(xs: Sequence[float], q: float) -> Optional[float]:
+    """Percentile in milliseconds, None (not NaN) on an empty sample —
+    keeps ``summary()`` JSON-safe for zero-completion runs."""
+    return percentile(list(xs), q) * 1e3 if xs else None
 
 
 @dataclass
@@ -133,6 +145,15 @@ class ServingReport:
     preemptions: int = 0                     # swap-outs over the run
     prefix: Dict[str, int] = field(default_factory=dict)
     slo_ms: Optional[Dict[Optional[int], float]] = None
+    # step-time histograms (ms; repro.obs.metrics.Histogram) — always
+    # populated (one bisect per step), the source for summary()'s
+    # p50/p99 and for registry snapshots
+    decode_hist: Histogram = field(default_factory=Histogram)
+    prefill_hist: Histogram = field(default_factory=Histogram)
+    draft_hist: Histogram = field(default_factory=Histogram)
+    verify_hist: Histogram = field(default_factory=Histogram)
+    # expert-load telemetry snapshot (engine expert_telemetry=True)
+    expert_load: Optional[Dict[str, Any]] = None
 
     def tokens_by_rid(self) -> Dict[int, np.ndarray]:
         """Generated tokens keyed by request id."""
@@ -170,19 +191,24 @@ class ServingReport:
         gen = sum(c.n_generated for c in self.completions)
         ttfts = [c.ttft for c in self.completions]
         lats = [c.latency for c in self.completions]
+        # zero-completion runs yield a well-formed summary: every
+        # percentile/mean field is None (never NaN — json.dumps(nan)
+        # emits invalid JSON), every count/rate field a real 0
         out = {
             "n_requests": n,
             "gen_tokens": gen,
             "wall_s": self.wall_s,
             "requests_per_s": n / max(self.wall_s, 1e-9),
             "gen_tokens_per_s": gen / max(self.wall_s, 1e-9),
-            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
-            "ttft_p95_ms": percentile(ttfts, 95) * 1e3,
-            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
-            "latency_p50_ms": percentile(lats, 50) * 1e3,
-            "latency_p95_ms": percentile(lats, 95) * 1e3,
+            "ttft_p50_ms": _pct_ms(ttfts, 50),
+            "ttft_p95_ms": _pct_ms(ttfts, 95),
+            "ttft_p99_ms": _pct_ms(ttfts, 99),
+            "latency_p50_ms": _pct_ms(lats, 50),
+            "latency_p95_ms": _pct_ms(lats, 95),
             "decode_step_ms_mean": (float(np.mean(self.decode_step_s)) * 1e3
-                                    if self.decode_step_s else float("nan")),
+                                    if self.decode_step_s else None),
+            "decode_step_ms_p50": self.decode_hist.percentile(50),
+            "decode_step_ms_p99": self.decode_hist.percentile(99),
             "decode_steps": len(self.decode_step_s),
             "truncated": sum(c.truncated for c in self.completions),
             "per_tier": self.per_tier(),
@@ -199,9 +225,18 @@ class ServingReport:
                 "acceptance_rate": (self.spec_accepted
                                     / max(self.spec_drafted, 1)),
                 "draft_step_ms_mean": float(np.mean(self.draft_step_s)) * 1e3,
+                "draft_step_ms_p50": self.draft_hist.percentile(50),
+                "draft_step_ms_p99": self.draft_hist.percentile(99),
                 "verify_step_ms_mean": (float(np.mean(self.verify_step_s))
                                         * 1e3),
+                "verify_step_ms_p50": self.verify_hist.percentile(50),
+                "verify_step_ms_p99": self.verify_hist.percentile(99),
             })
+        if self.expert_load is not None:
+            out["expert_load"] = {
+                k: self.expert_load[k]
+                for k in ("steps", "gini", "entropy", "hot_expert",
+                          "assignments_total")}
         return out
 
 
@@ -256,6 +291,18 @@ class ServingEngine:
     ``preemption`` (paged-only decode swap-out under deadline pressure;
     requires ``slo_ms``) and ``max_preemptions`` (per-request swap-out
     cap — the anti-livelock bound).
+
+    Observability knobs (repro.obs; docs/observability.md) — all
+    opt-in-pay, the defaults cost one attribute check per event site:
+    ``tracer`` (a :class:`repro.obs.Tracer`) records request-lifecycle
+    spans (queued/prefill/decode + swap instants per rid) and
+    engine-loop spans (admit/prefill/decode_step), exports Chrome
+    trace-event JSON, and is flight-dumped if ``run()`` raises;
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) receives engine
+    counters and registers the pool and scheduler as snapshot-time
+    sources; ``expert_telemetry=True`` (MoE, non-speculative) compiles
+    the decode step to also return per-expert activation counts, which
+    feed ``report.expert_load`` host-side — no kernel changes.
     """
 
     def __init__(self, cfg, params: PyTree, *, lora: Optional[PyTree] = None,
@@ -272,7 +319,10 @@ class ServingEngine:
                  preemption: bool = False,
                  slo_ms: Optional[Dict[Optional[int], float]] = None,
                  max_preemptions: int = 4,
-                 seed: int = 0):
+                 seed: int = 0,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 expert_telemetry: bool = False):
         assert cfg.num_codebooks == 0, "serving engine: text models only"
         assert kv_layout in ("paged", "slotted"), kv_layout
         if dispatch is None:
@@ -365,6 +415,32 @@ class ServingEngine:
         self._seed = seed
         self._req_keys: Dict[int, jax.Array] = {}
 
+        # ---- observability (all opt-in-pay; see repro.obs) ----
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        self._metrics = metrics
+        if expert_telemetry and not cfg.moe.enabled:
+            raise ValueError("expert_telemetry needs an MoE model: a "
+                             "dense model routes nothing to observe")
+        if expert_telemetry and speculative is not None:
+            raise ValueError(
+                "expert_telemetry under speculative decoding is not "
+                "supported yet: the fused draft window does not surface "
+                "activation counts")
+        self._expert_telemetry = bool(expert_telemetry)
+        self._expert_tracker = (ExpertLoadTracker(cfg.moe.num_experts)
+                                if self._expert_telemetry else None)
+        if metrics is not None:
+            metrics.add_source(self.pool.publish)
+            metrics.add_source(self.scheduler.publish)
+            self._ctr_completions = metrics.counter("serving.completions")
+            self._ctr_tokens = metrics.counter("serving.gen_tokens")
+            self._ctr_admitted = metrics.counter("serving.admitted")
+            self._ctr_preempt = metrics.counter("serving.preemptions")
+        if self._tracer.enabled:
+            self._tracer.process_name(PID_ENGINE, "serving-engine")
+            self._tracer.thread_name(PID_ENGINE, 0, "engine loop")
+            self._tracer.process_name(PID_REQUESTS, "requests")
+
         @partial(jax.jit, static_argnames=("k",))
         def _prefill_fn(params, trainable, prompts, real, k):
             if dispatch == "ragged" and cfg.moe.enabled:
@@ -394,13 +470,15 @@ class ServingEngine:
                     slot_mask=real if cfg.moe.enabled else None)
             return logits[:, 0].astype(jnp.float32), cache
 
-        self._decode_fn = self._build_decode_fn(self._moe_k)
+        self._decode_fn = self._build_decode_fn(
+            self._moe_k, return_counts=self._expert_telemetry)
         self._prefill_fn = _prefill_fn
         self._spec = (SpeculativeDecoder(self, speculative)
                       if speculative is not None else None)
 
     # -------------------------------------------------------- compiled steps
-    def _build_decode_fn(self, moe_k: Optional[Tuple[int, ...]]):
+    def _build_decode_fn(self, moe_k: Optional[Tuple[int, ...]],
+                         return_counts: bool = False):
         """One jitted single-token decode step over the whole pool.
 
         The pool cache is donated: the engine replaces its reference with
@@ -410,6 +488,12 @@ class ServingEngine:
         garbage rows can never consume expert capacity a real request
         needs.  ``moe_k`` is baked in — the speculative decoder compiles
         its own fused draft window with every slot at ``draft_k``.
+
+        ``return_counts`` (expert telemetry) additionally returns the
+        step's per-expert activation counts ``{posN: (n_periods, E)}`` —
+        a distinct compiled executable, built only when the engine was
+        constructed with ``expert_telemetry=True`` so the default step
+        pays nothing.
         """
         cfg, dispatch = self.cfg, self.dispatch
         page_span = self.pool.attn_len if self.paged else None
@@ -417,20 +501,20 @@ class ServingEngine:
             @partial(jax.jit, donate_argnums=(2,))
             def _decode_fn(params, trainable, cache, tokens, pos, active,
                            tables):
-                logits, new_cache = model_lib.decode_step(
+                out = model_lib.decode_step(
                     cfg, params, cache, tokens, pos, trainable=trainable,
                     k=moe_k, slot_mask=active if cfg.moe.enabled else None,
                     block_table=tables, page_span=page_span,
-                    dispatch=dispatch)
-                return logits[:, 0].astype(jnp.float32), new_cache
+                    dispatch=dispatch, return_counts=return_counts)
+                return (out[0][:, 0].astype(jnp.float32),) + out[1:]
         else:
             @partial(jax.jit, donate_argnums=(2,))
             def _decode_fn(params, trainable, cache, tokens, pos, active):
-                logits, new_cache = model_lib.decode_step(
+                out = model_lib.decode_step(
                     cfg, params, cache, tokens, pos, trainable=trainable,
                     k=moe_k, slot_mask=active if cfg.moe.enabled else None,
-                    dispatch=dispatch)
-                return logits[:, 0].astype(jnp.float32), new_cache
+                    dispatch=dispatch, return_counts=return_counts)
+                return (out[0][:, 0].astype(jnp.float32),) + out[1:]
         return _decode_fn
 
     def _build_verify_fn(self):
@@ -520,6 +604,7 @@ class ServingEngine:
         """One admission round: a normal packing pass, then — with
         preemption on — swap out lenient-deadline victims while a waiter
         is past its TTFT deadline and another pass can seat it."""
+        t0 = self._now()
         n = self._admit_pass(report)
         if self._preemption:
             for _ in range(self.num_slots):
@@ -535,6 +620,12 @@ class ServingEngine:
                     # stop rather than strip the pool in one round —
                     # the next engine iteration tries again
                     break
+        if n:
+            if self._tracer.enabled:
+                self._tracer.complete("admit", t0, self._now(), cat="engine",
+                                      args={"admitted": n})
+            if self._metrics is not None:
+                self._ctr_admitted.inc(n)
         return n
 
     def _pick_victim(self) -> Optional[int]:
@@ -584,6 +675,13 @@ class ServingEngine:
         self._active[slot] = None
         self.scheduler.add(a.req)
         report.preemptions += 1
+        if self._tracer.enabled:
+            a.swap_t = self._now()
+            self._tracer.instant("swap_out", a.swap_t, pid=PID_REQUESTS,
+                                 tid=a.req.rid, cat="preempt",
+                                 args={"slot": slot})
+        if self._metrics is not None:
+            self._ctr_preempt.inc()
 
     def _admit_pass(self, report: ServingReport) -> int:
         free = self.pool.free_slots
@@ -655,6 +753,14 @@ class ServingEngine:
                 self.pool.swap_in(slot, state)
                 self._active[slot] = a
                 self._last_tok[slot, 0] = last
+                if self._tracer.enabled:
+                    now = self._now()
+                    self._tracer.complete(
+                        "swapped_out", a.swap_t, now, pid=PID_REQUESTS,
+                        tid=req.rid, cat="preempt")
+                    self._tracer.instant("swap_in", now, pid=PID_REQUESTS,
+                                         tid=req.rid, cat="preempt",
+                                         args={"slot": slot})
                 continue
             assert req.prompt_len + 1 <= self.slot_len, \
                 f"request {req.rid}: prompt {req.prompt_len} leaves no room" \
@@ -677,6 +783,12 @@ class ServingEngine:
                             tokens=[r.prompt for r, _ in items])
             tft = self._now()
             report.prefill_s.append(tft - admitted)
+            report.prefill_hist.observe((tft - admitted) * 1e3)
+            if self._tracer.enabled:
+                self._tracer.complete("prefill", admitted, tft, cat="engine",
+                                      args={"batch": nb, "bucket": bucket,
+                                            "prompt_len": L,
+                                            "k": kk if kk is not None else 0})
 
             for j, (req, slot) in enumerate(items):
                 max_new = self._max_new(req)
@@ -738,13 +850,23 @@ class ServingEngine:
             # succeed: covered by the reservation made at admit)
             self.pool.prepare_decode(active)
             extra = (self.pool.tables(),)
-        logits, new_cache = self._decode_fn(
+        out = self._decode_fn(
             self.params, self._decode_trainable, self.pool.cache,
             jnp.asarray(self._last_tok), self.pool.positions(), active_mask,
             *extra)
+        logits, new_cache = out[0], out[1]
         logits_np = np.asarray(logits)              # blocks until ready
         self.pool.cache = new_cache
-        report.decode_step_s.append(time.perf_counter() - t_start)
+        dt = time.perf_counter() - t_start
+        report.decode_step_s.append(dt)
+        report.decode_hist.observe(dt * 1e3)
+        if self._expert_telemetry:
+            self._expert_tracker.observe_step(
+                {p: np.asarray(c) for p, c in out[2].items()})
+        if self._tracer.enabled:
+            end = self._now()
+            self._tracer.complete("decode_step", end - dt, end, cat="engine",
+                                  args={"active": len(active)})
 
         self.pool.advance(active)
         for slot in active:
@@ -758,14 +880,37 @@ class ServingEngine:
 
     def _finish(self, slot: int, report: ServingReport) -> None:
         a = self._active[slot]
-        report.completions.append(Completion(
+        c = Completion(
             rid=a.req.rid, prompt_len=a.req.prompt_len,
             tokens=np.asarray(a.tokens, np.int32),
             k=self.slot_k[slot] or 0, arrival=a.req.arrival,
             admitted=a.admitted, first_token=a.first_token,
             finished=self._now(), nll_sum=a.nll,
             truncated=len(a.tokens) < a.max_new,
-            preemptions=a.preemptions))
+            preemptions=a.preemptions)
+        report.completions.append(c)
+        if self._tracer.enabled:
+            # the request's lifecycle track, emitted retrospectively from
+            # the completion's timestamps: an enclosing span plus the
+            # queued → prefill → decode phases (swap events were emitted
+            # live as the preemptions happened)
+            tr = self._tracer
+            tid = c.rid
+            tr.thread_name(PID_REQUESTS, tid, f"req {tid}")
+            args = {"rid": c.rid, "k": c.k, "prompt_len": c.prompt_len,
+                    "gen_tokens": c.n_generated,
+                    "preemptions": c.preemptions}
+            tr.complete("request", c.arrival, c.finished, pid=PID_REQUESTS,
+                        tid=tid, cat="request", args=args)
+            tr.complete("queued", c.arrival, c.admitted, pid=PID_REQUESTS,
+                        tid=tid, cat="request")
+            tr.complete("prefill", c.admitted, c.first_token,
+                        pid=PID_REQUESTS, tid=tid, cat="request")
+            tr.complete("decode", c.first_token, c.finished,
+                        pid=PID_REQUESTS, tid=tid, cat="request")
+        if self._metrics is not None:
+            self._ctr_completions.inc()
+            self._ctr_tokens.inc(c.n_generated)
         self._active[slot] = None
         if self.paged:
             self._tier_reserved[self.slot_k[slot]] -= \
@@ -812,34 +957,69 @@ class ServingEngine:
         pending = sorted(requests, key=lambda r: r.arrival)
         report = ServingReport(completions=[], num_slots=self.num_slots,
                                slot_k=self.slot_k, slo_ms=self.slo_ms)
+        if self._metrics is not None:
+            # expose this run's step histograms through the registry
+            # (rebound every run; externally owned, so no copying)
+            self._metrics.register("serving.decode_step_ms",
+                                   report.decode_hist)
+            self._metrics.register("serving.prefill_ms", report.prefill_hist)
+            if self._spec is not None:
+                self._metrics.register("serving.draft_step_ms",
+                                       report.draft_hist)
+                self._metrics.register("serving.verify_step_ms",
+                                       report.verify_hist)
+        if self._expert_tracker is not None:
+            self._expert_tracker.reset()
         self._t0 = time.perf_counter()
+        tr = self._tracer
+        if tr.enabled:
+            tr.anchor(0.0)           # tracer time == engine-relative time
         steps = 0
-        while pending or len(self.scheduler) or self.n_active:
-            now = self._now()
-            while pending and pending[0].arrival <= now:
-                self.scheduler.add(pending.pop(0))
-            admitted = self._admit(report)
-            if self.n_active:
-                if self._spec is not None:
-                    self._spec.round(report)
-                else:
-                    self._decode_once(report)
-                steps += 1
-                if max_steps is not None and steps >= max_steps:
-                    break
-            elif not admitted:
-                if pending:                  # idle until the next arrival
-                    time.sleep(max(0.0, min(pending[0].arrival - self._now(),
-                                            0.01)))
-                elif len(self.scheduler):
-                    stuck = [r.rid for r in self.scheduler.queue]
-                    raise RuntimeError(
-                        f"requests {stuck} match no slot tier "
-                        f"(slot_k={self.slot_k})")
+        try:
+            while pending or len(self.scheduler) or self.n_active:
+                now = self._now()
+                while pending and pending[0].arrival <= now:
+                    self.scheduler.add(pending.pop(0))
+                admitted = self._admit(report)
+                if tr.enabled:
+                    tr.counter("engine", self._now(),
+                               {"active_slots": self.n_active,
+                                "queue_depth": len(self.scheduler)})
+                if self.n_active:
+                    if self._spec is not None:
+                        self._spec.round(report)
+                    else:
+                        self._decode_once(report)
+                    steps += 1
+                    if max_steps is not None and steps >= max_steps:
+                        break
+                elif not admitted:
+                    if pending:              # idle until the next arrival
+                        time.sleep(max(0.0,
+                                       min(pending[0].arrival - self._now(),
+                                           0.01)))
+                    elif len(self.scheduler):
+                        stuck = [r.rid for r in self.scheduler.queue]
+                        raise RuntimeError(
+                            f"requests {stuck} match no slot tier "
+                            f"(slot_k={self.slot_k})")
+        except Exception:
+            # flight recorder: leave the last `ring` trace events on disk
+            # for a postmortem of the stuck/crashed run, then re-raise
+            path = tr.flight_dump()
+            if path is not None:
+                import sys
+                print(f"serving engine: exception — flight recorder "
+                      f"dumped to {path}", file=sys.stderr)
+            raise
         report.wall_s = self._now()
         report.completions.sort(key=lambda c: c.rid)
         assert not self._swapped or max_steps is not None, \
             "swapped-out requests left behind after a full run"
         if self.prefix_cache:
             report.prefix = self.pool.prefix_stats()
+        if self._expert_tracker is not None:
+            report.expert_load = self._expert_tracker.snapshot()
+            if self._metrics is not None:
+                self._expert_tracker.publish(self._metrics)
         return report

@@ -161,6 +161,14 @@ class _RowPool:
         """Device bytes held by the pool's cache tree."""
         return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
 
+    def publish(self, reg) -> None:
+        """Set pool gauges on ``reg`` (a repro.obs.MetricsRegistry).
+        The engine registers this as a pull *source*, so the pool pays
+        nothing between registry snapshots."""
+        reg.gauge("serving.kv.num_slots").set(self.num_slots)
+        reg.gauge("serving.kv.slots_free").set(self.num_free)
+        reg.gauge("serving.kv.kv_bytes").set(self.kv_bytes())
+
 
 class SlotPool(_RowPool):
     """Fixed-capacity slotted KV-cache pool with allocate/release."""
@@ -574,6 +582,22 @@ class BlockPool(_RowPool):
             "evictions": self.prefix_evictions,
             "cached_blocks": len(self._cache_map),
         }
+
+    def publish(self, reg) -> None:
+        """Paged-pool gauges: block occupancy, reservation headroom,
+        swap and prefix-cache counters — sampled at snapshot time."""
+        super().publish(reg)
+        reg.gauge("serving.kv.num_blocks").set(self.num_blocks)
+        reg.gauge("serving.kv.blocks_used").set(self.blocks_in_use)
+        reg.gauge("serving.kv.blocks_free").set(
+            self.num_blocks - self.blocks_in_use)
+        reg.gauge("serving.kv.blocks_available").set(self.available_blocks)
+        reg.gauge("serving.kv.blocks_peak").set(self.peak_blocks)
+        reg.gauge("serving.kv.swap_outs").set(self.swap_outs)
+        reg.gauge("serving.kv.swap_ins").set(self.swap_ins)
+        if self.prefix_cache:
+            for name, v in self.prefix_stats().items():
+                reg.gauge(f"serving.kv.prefix.{name}").set(v)
 
     # ----------------------------------------------------------- preemption
     def swap_out(self, slot: int) -> Dict[str, Any]:

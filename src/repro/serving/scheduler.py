@@ -85,6 +85,7 @@ class Scheduler:
     queue: List[Request] = field(default_factory=list)
     policy: str = "fifo"               # "fifo" | "slo" (EDF)
     tier_slo_s: Optional[Dict[Optional[int], float]] = None
+    enqueued: int = 0                  # cumulative adds (incl. re-queues)
 
     def __post_init__(self) -> None:
         assert self.policy in ("fifo", "slo"), self.policy
@@ -94,9 +95,16 @@ class Scheduler:
     def add(self, req: Request) -> None:
         """Enqueue an arrived request."""
         self.queue.append(req)
+        self.enqueued += 1
 
     def __len__(self) -> int:
         return len(self.queue)
+
+    def publish(self, reg) -> None:
+        """Set queue gauges on ``reg`` (a repro.obs.MetricsRegistry);
+        the engine registers this as a snapshot-time pull source."""
+        reg.gauge("serving.scheduler.queue_depth").set(len(self.queue))
+        reg.gauge("serving.scheduler.enqueued_total").set(self.enqueued)
 
     def deadline(self, req: Request) -> float:
         """The request's TTFT deadline on the engine clock: arrival plus

@@ -307,7 +307,13 @@ class SpeculativeDecoder:
             jnp.asarray(first), jnp.asarray(pos0), *extra,
             self._draw_keys(active, W))
         d_toks = np.asarray(toks)                          # (W, B) — sync
-        report.draft_step_s.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        report.draft_step_s.append(dt)
+        report.draft_hist.observe(dt * 1e3)
+        if eng._tracer.enabled:
+            end = eng._now()
+            eng._tracer.complete("draft", end - dt, end, cat="engine",
+                                 args={"window": W, "active": len(active)})
 
         # ---- verify + reject: one full-k step over the W+1 window
         # tokens, then the vmapped rejection rule over all slots ----
@@ -326,7 +332,13 @@ class SpeculativeDecoder:
             jnp.moveaxis(qs, 0, 1), lv)
         out_toks = np.asarray(out_toks)                    # (B, W+1) — sync
         n_emit, n_acc = np.asarray(n_emit), np.asarray(n_acc)
-        report.verify_step_s.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        report.verify_step_s.append(dt)
+        report.verify_hist.observe(dt * 1e3)
+        if eng._tracer.enabled:
+            end = eng._now()
+            eng._tracer.complete("verify", end - dt, end, cat="engine",
+                                 args={"window": W})
 
         for s in active:
             a = eng._active[s]
