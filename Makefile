@@ -19,6 +19,7 @@ coverage:
 		repro/kernels repro/serving repro/obs \
 		repro/serving/sampler.py repro/serving/speculative.py \
 		repro/serving/kv_cache.py repro/serving/scheduler.py \
+		repro/serving/engine.py \
 		repro/obs/trace.py repro/obs/metrics.py \
 		repro/obs/expert_load.py
 

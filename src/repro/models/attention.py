@@ -375,7 +375,8 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                     cache_pos: Optional[jnp.ndarray] = None,
                     return_cache: bool = False,
                     block_table: Optional[jnp.ndarray] = None,
-                    page_span: Optional[int] = None):
+                    page_span: Optional[int] = None,
+                    suffix_readonly: bool = False):
     """x: (B,S,D_model).  Training/prefill when ``cache`` is None or being
     built; decode (S==1) when ``cache`` holds the K/V ring; speculative
     verify (S>1 with a cache) teacher-forces an S-token window against
@@ -385,6 +386,15 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
     are the global block pool (NB+1, bs, KV, D) instead of per-row rings;
     each row's pages are selected by its block-table row and gathered back
     into the slotted layout before attending (see paged_gather).
+
+    ``suffix_readonly`` (with a block table and S > 1): the suffix-only
+    cached-prefill mode — queries sit at per-row offset ``cache_pos``
+    (the already-cached prefix length) and attend the gathered prefix
+    pages plus the in-flight suffix, exactly the verify-window graph, but
+    the pool is NOT written in-graph: the new K/V come back as a
+    contiguous (B,S,KV,D) piece the caller scatters host-side
+    (serving/kv_cache.BlockPool.write), because rows sharing attached
+    blocks must not re-write them.
 
     Returns (out, new_cache) where new_cache is None unless requested.
     """
@@ -442,6 +452,18 @@ def apply_attention(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
                                window=cfg.attention_window,
                                logit_softcap=cfg.attn_logit_softcap)
         new_cache = {"k": k_cache, "v": v_cache}
+    elif (cache is not None and cache_pos is not None
+            and block_table is not None and suffix_readonly):
+        # suffix-only cached prefill (S > 1): per-row query offset
+        # cache_pos (= the prefix length), prefix pages read-only, new
+        # K/V returned as a contiguous piece instead of scattered —
+        # attached shared blocks must never be re-written in-graph.
+        kg = paged_gather(cache["k"], block_table, page_span)
+        vg = paged_gather(cache["v"], block_table, page_span)
+        out = verify_attention(q, k, v, kg, vg, cache_pos,
+                               window=cfg.attention_window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": k, "v": v}
     elif (cache is not None and cache_pos is not None
             and block_table is not None):
         # paged speculative verify (S > 1): attend each row's gathered

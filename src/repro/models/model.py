@@ -127,7 +127,8 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
                  cache=None, cache_pos=None, return_cache=False,
                  deterministic=True, num_groups=1, inner_act_fn=None,
                  outer_act_fn=None, moe_shard_fns=None, slot_mask=None,
-                 block_table=None, page_span=None, dispatch=None):
+                 block_table=None, page_span=None, dispatch=None,
+                 suffix_readonly=False):
     def _reshard(t):
         # force the residual add's output back to the between-block
         # sharding so GSPMD lowers the partial-sum as a reduce-scatter
@@ -149,7 +150,7 @@ def _apply_block(cfg, kind: str, is_moe: bool, p: dict, x: jnp.ndarray,
             lora_scale=lora_scale,
             cache=(cache or {}).get("attn"), cache_pos=cache_pos,
             return_cache=return_cache, block_table=block_table,
-            page_span=page_span)
+            page_span=page_span, suffix_readonly=suffix_readonly)
         if mc is not None:
             new_cache["attn"] = mc
     else:
@@ -190,7 +191,8 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 remat=False, remat_chunk=0, deterministic=True,
                 num_groups=1, act_fn=None, inner_act_fn=None,
                 moe_shard_fns=None, slot_mask=None, block_table=None,
-                page_span=None, dispatch=None):
+                page_span=None, dispatch=None, cache_readonly=False,
+                suffix_readonly=False):
     P = cfg.pattern_period
     trainable = trainable or {}
     lora_blocks = (trainable.get("lora") or {}).get("blocks") or {}
@@ -208,8 +210,11 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
     # dynamic_update_index per period) instead of xs→ys.  While-loop carry
     # buffers alias in place; xs→ys would double-buffer the whole cache —
     # measured +20 GB/device on llama3-405b × decode_32k (EXPERIMENTS.md
-    # §Perf H3).
-    carry_cache = cache is not None and return_cache
+    # §Perf H3).  ``cache_readonly`` opts out of the carry: the cache is
+    # only read (xs) while the per-period NEW K/V — shaped like a
+    # contiguous piece, not like the pool — still comes back via ys
+    # (the suffix-prefill path).
+    carry_cache = cache is not None and return_cache and not cache_readonly
     if cache is not None and not carry_cache:
         xs["cache"] = cache
 
@@ -236,7 +241,7 @@ def _stack_scan(cfg, params, x, positions, *, trainable, k,
                 outer_act_fn=act_fn if inner_act_fn is not None else None,
                 moe_shard_fns=moe_shard_fns, slot_mask=slot_mask,
                 block_table=block_table, page_span=page_span,
-                dispatch=dispatch)
+                dispatch=dispatch, suffix_readonly=suffix_readonly)
             if aux is not None:
                 counts[key] = aux.activation_counts
             if nc is not None:
@@ -670,3 +675,51 @@ def prefill(cfg, params, tokens, *, trainable=None, k=None, num_groups=1,
     cache = {pos: pad_attn(c) for pos, c in cache.items()}
     h = rms_norm(params["final_norm"], h[:, -1:], cfg.rms_eps)
     return lm_head(params, cfg, h), cache
+
+
+def prefill_suffix(cfg, params, tokens, prefix_len, suffix_len, cache,
+                   block_table, *, page_span, trainable=None, k=None,
+                   num_groups=1, slot_mask=None, dispatch=None):
+    """Suffix-only cached prefill against a block-paged pool.
+
+    A request whose prompt head is already cached (prefix sharing,
+    serving/kv_cache.BlockPool) pays compute for the *unmatched suffix*
+    only: ``tokens`` (B, S) holds each row's suffix (padded to the
+    bucket), RoPE'd and attended at absolute positions ``prefix_len[b] +
+    s``, reading the attached prefix pages through ``block_table``
+    read-only (attention.apply_attention suffix mode).  MoE routing runs
+    over the S suffix columns only, so ragged dispatch cost drops to
+    ``sum(suffix_len · k)`` instead of ``sum(prompt_len · k)``.
+
+    ``prefix_len``/``suffix_len``: (B,) int32 — the per-row cached-prefix
+    offset and real (un-padded) suffix length; logits come from column
+    ``suffix_len - 1``.  ``slot_mask``: optional (B, S) 0/1 per-token
+    validity (padding rows AND ragged suffix-padding columns), required
+    by the capacity dispatch mode; the loss-free modes only need it for
+    rows (padding cannot perturb real tokens there).
+
+    Attention-only models (an SSM's state at the suffix start is not
+    reconstructible from cached K/V — the engine gates on this).
+    Returns (logits (B, 1, V) at the last real suffix token, piece) where
+    ``piece[pos]["attn"]["k"|"v"]`` is (n_periods, B, S, KV, hd) with
+    column ``c`` holding prompt position ``prefix_len[b] + c`` — exactly
+    what ``BlockPool.write(..., starts=, piece_col0=)`` scatters.
+    """
+    P = cfg.pattern_period
+    if any(cfg.layer_kind(p) != "attn" for p in range(P)):
+        raise ValueError("prefill_suffix requires attention-only models")
+    dispatch = moe_mod.resolve_dispatch(dispatch, False)
+    B, S = tokens.shape[:2]
+    prefix_len = jnp.asarray(prefix_len)
+    suffix_len = jnp.asarray(suffix_len)
+    positions = prefix_len[:, None] + jnp.arange(S)[None, :]
+    x = embed_tokens(params, cfg, tokens)
+    h, ys = _stack_scan(cfg, params, x, positions, trainable=trainable,
+                        k=k, cache=cache, cache_pos=prefix_len,
+                        return_cache=True, cache_readonly=True,
+                        num_groups=num_groups, slot_mask=slot_mask,
+                        block_table=block_table, page_span=page_span,
+                        dispatch=dispatch, suffix_readonly=True)
+    h = rms_norm(params["final_norm"], h, cfg.rms_eps)
+    last = h[jnp.arange(B), jnp.clip(suffix_len - 1, 0, S - 1)]
+    return lm_head(params, cfg, last[:, None]), ys["cache"]

@@ -232,6 +232,8 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
     cannot occupy expert-queue capacity that real rows need.  The serving
     engine masks its free slots this way; without it, garbage rows in a
     slotted decode batch could evict real tokens under GShard capacity.
+    A (B, S) mask applies per token — the suffix-prefill path masks
+    ragged suffix-length padding columns the same way.
 
     ``dispatch`` selects among three token-dispatch strategies (see
     docs/kernels.md §MoE dispatch modes for the trade-off table):
@@ -294,7 +296,10 @@ def apply_moe(p: dict, cfg, x: jnp.ndarray, *, k,
         from ..kernels.ref import adaptive_topk_router_ref
         k_tok = jnp.repeat(jnp.asarray(k_slots, jnp.int32), S)
         if slot_mask is not None:
-            k_tok = k_tok * jnp.repeat(slot_mask.astype(jnp.int32), S)
+            if slot_mask.ndim == 2:        # per-token (B, S) validity
+                k_tok = k_tok * slot_mask.reshape(T).astype(jnp.int32)
+            else:
+                k_tok = k_tok * jnp.repeat(slot_mask.astype(jnp.int32), S)
         weights, mask, counts = adaptive_topk_router_ref(
             logits.reshape(T, E), k_tok, max_k)                   # (T, E) fp32
     else:

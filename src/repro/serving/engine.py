@@ -46,10 +46,20 @@ rejected K/V back (serving/speculative.py).
 Production traffic controls (docs/serving.md is the operations guide):
 
 * ``prefix_cache=True`` (paged only) — prompts are content-matched
-  against the pool's block index at ``write`` time, so requests sharing
-  a system prompt hold its KV blocks once (refcounts + copy-on-write in
-  kv_cache.BlockPool).  Numerically invisible: prefill K/V for equal
-  tokens is equal, so sharing the blocks changes no output.
+  against the pool's block index at admission
+  (``BlockPool.attach_prefix``), so requests sharing a system prompt
+  hold its KV blocks once (refcounts + copy-on-write in
+  kv_cache.BlockPool) — and, for attention-only models, prefill runs
+  over the UNMATCHED SUFFIX only (``model.prefill_suffix``), attending
+  back into the attached prefix pages: prefill compute follows unseen
+  tokens instead of prompt length, and admission buckets matched rows
+  by suffix length, so a flash crowd of long shared-head prompts
+  collapses into small buckets (cold misses run the plain exact-length
+  prefill, identical to a cold engine's launches).  Token-for-token
+  invisible: the suffix step reproduces
+  the cold logits to float tolerance, and the greedy differential in
+  tests/test_traffic.py locks exact token identity against a cold
+  engine.
 * ``slo_ms={tier_k: target_ms}`` — per-tier TTFT targets; the scheduler
   switches to earliest-deadline-first admission and ``summary()`` gains
   per-tier p50/p99 TTFT, tokens/s and SLO attainment.
@@ -60,7 +70,11 @@ Production traffic controls (docs/serving.md is the operations guide):
   the victim resume later through normal re-admission — token-for-token
   identical to an uncontended run, because the swap round-trips the
   row's exact KV/SSM state and the per-request PRNG event counter lives
-  in the preserved ``_ActiveSlot``.
+  in the preserved ``_ActiveSlot``.  Composes with speculative decoding:
+  preemption fires between draft/verify rounds, and a swap-out of a slot
+  with an open draft window first rolls the window back to the last
+  verified token (``SpeculativeDecoder.rollback_open``), so the swapped
+  state never carries unverified draft positions.
 """
 from __future__ import annotations
 
@@ -98,6 +112,18 @@ def _bucket(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _tier_salt(k: Optional[int]) -> bytes:
+    """Prefix-digest salt for an expert-budget tier.
+
+    A block's K/V depends on the tokens AND on the MoE expert budget
+    ``k`` the writer ran at — every layer's hidden states (hence K/V)
+    change with the number of experts mixed in.  Salting the digest
+    chain with the tier keeps equal prompts served at different ``k``
+    from ever aliasing each other's numerically different pages.
+    """
+    return b"" if k is None else str(int(k)).encode()
 
 
 @dataclass
@@ -143,6 +169,10 @@ class ServingReport:
     spec_accepted: int = 0
     # production-traffic accounting
     preemptions: int = 0                     # swap-outs over the run
+    # tokens the prefill steps actually computed: full prompts on a cold
+    # engine, unmatched suffixes only under suffix-prefill — the bench's
+    # direct measure of prefill compute saved by the prefix cache
+    prefill_tokens: int = 0
     prefix: Dict[str, int] = field(default_factory=dict)
     slo_ms: Optional[Dict[Optional[int], float]] = None
     # step-time histograms (ms; repro.obs.metrics.Histogram) — always
@@ -210,6 +240,7 @@ class ServingReport:
             "decode_step_ms_p50": self.decode_hist.percentile(50),
             "decode_step_ms_p99": self.decode_hist.percentile(99),
             "decode_steps": len(self.decode_step_s),
+            "prefill_tokens": self.prefill_tokens,
             "truncated": sum(c.truncated for c in self.completions),
             "per_tier": self.per_tier(),
         }
@@ -286,11 +317,15 @@ class ServingEngine:
 
     Production traffic knobs (see the module docstring and
     docs/serving.md): ``prefix_cache`` (paged-only block sharing for
-    prompts), ``slo_ms`` (per-tier TTFT targets in milliseconds, keyed
-    by tier ``k`` — switches admission to earliest-deadline-first),
-    ``preemption`` (paged-only decode swap-out under deadline pressure;
-    requires ``slo_ms``) and ``max_preemptions`` (per-request swap-out
-    cap — the anti-livelock bound).
+    prompts, plus suffix-only prefill on attention-only models — only
+    the unmatched prompt suffix is computed, attending into the attached
+    prefix pages), ``slo_ms`` (per-tier TTFT targets in milliseconds,
+    keyed by tier ``k`` — switches admission to
+    earliest-deadline-first), ``preemption`` (paged-only decode swap-out
+    under deadline pressure; requires ``slo_ms``; composes with
+    ``speculative`` — an open draft window is rolled back before the
+    swap) and ``max_preemptions`` (per-request swap-out cap — the
+    anti-livelock bound).
 
     Observability knobs (repro.obs; docs/observability.md) — all
     opt-in-pay, the defaults cost one attribute check per event site:
@@ -349,10 +384,6 @@ class ServingEngine:
                 raise ValueError(
                     "preemption needs slo_ms targets: victim selection "
                     "is driven by TTFT deadlines")
-            if speculative is not None:
-                raise ValueError(
-                    "preemption under speculative decoding is not "
-                    "supported yet")
         if cfg.moe.enabled:
             resolved = tuple(int(v) for v in (
                 slot_k if slot_k is not None
@@ -393,6 +424,14 @@ class ServingEngine:
         else:
             self.pool = SlotPool(cfg, num_slots, slot_len)
         self.prefix_cache = prefix_cache
+        # suffix-only cached prefill: prefill computes only the prompt
+        # suffix past the matched prefix span, attending back into the
+        # attached pages (model.prefill_suffix).  Attention-only models
+        # only — an SSM layer's state is cumulative over the whole
+        # prompt, so a mixed model falls back to full prefill (the
+        # blocks still share; only the compute saving is lost).
+        self._use_suffix = prefix_cache and all(
+            cfg.layer_kind(p) == "attn" for p in range(cfg.pattern_period))
         self.slo_ms = dict(slo_ms) if slo_ms else None
         self._preemption = preemption
         self._max_preemptions = max_preemptions
@@ -470,9 +509,59 @@ class ServingEngine:
                     slot_mask=real if cfg.moe.enabled else None)
             return logits[:, 0].astype(jnp.float32), cache
 
+        suffix_attn = self.pool.attn_len if self.paged else 0
+        suffix_bs = self.pool.block_size if self.paged else 1
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _suffix_prefill_fn(params, trainable, cache, tokens, tables,
+                               prefix_len, suffix_len, real, k):
+            # cache is READ-ONLY here (not donated): the suffix step
+            # gathers the attached prefix pages per row and returns the
+            # new K/V as a contiguous piece — BlockPool.write scatters
+            # it host-side, exactly like the cold path.  Shapes depend
+            # only on (batch bucket, suffix bucket, page-span bucket, k):
+            # prefix_len and suffix_len are traced per-row vectors.
+            # ``tables`` arrives SLICED to the pow-2 block span covering
+            # the group's live prefix+suffix — the page gather (the
+            # launch-dominating cost at short suffixes) follows the data
+            # actually attended, not the slot's full capacity; every
+            # live prefix position is < the span by construction and
+            # anything past it was masked invalid anyway.
+            suffix_span = min(tables.shape[1] * suffix_bs, suffix_attn)
+            if dispatch == "ragged" and cfg.moe.enabled:
+                # row-isolated by construction — one routing group, and
+                # dispatch cost follows sum(suffix_len · k), the
+                # resource-proportionality point of suffix prefill
+                logits, piece = model_lib.prefill_suffix(
+                    cfg, params, tokens, prefix_len, suffix_len, cache,
+                    tables, page_span=suffix_span, trainable=trainable,
+                    k=k, dispatch="ragged")
+            elif dispatch == "dense" and cfg.moe.enabled:
+                logits, piece = model_lib.prefill_suffix(
+                    cfg, params, tokens, prefix_len, suffix_len, cache,
+                    tables, page_span=suffix_span, trainable=trainable,
+                    k=k, num_groups=tokens.shape[0], dispatch="dense")
+            else:
+                # capacity dispatch: per-TOKEN validity, not per-row —
+                # bucket-padding columns inside real rows must not
+                # consume expert capacity or a request's output would
+                # depend on what shares its bucket
+                mask = None
+                if cfg.moe.enabled:
+                    S = tokens.shape[1]
+                    mask = (real[:, None] *
+                            (jnp.arange(S)[None, :]
+                             < suffix_len[:, None]).astype(jnp.float32))
+                logits, piece = model_lib.prefill_suffix(
+                    cfg, params, tokens, prefix_len, suffix_len, cache,
+                    tables, page_span=suffix_span, trainable=trainable,
+                    k=k, slot_mask=mask, dispatch=dispatch)
+            return logits[:, 0].astype(jnp.float32), piece
+
         self._decode_fn = self._build_decode_fn(
             self._moe_k, return_counts=self._expert_telemetry)
         self._prefill_fn = _prefill_fn
+        self._suffix_prefill_fn = _suffix_prefill_fn
         self._spec = (SpeculativeDecoder(self, speculative)
                       if speculative is not None else None)
 
@@ -666,6 +755,11 @@ class ServingEngine:
         is pinned to its slot's ``k`` so re-admission resumes it at the
         budget it started decoding with."""
         a = self._active[slot]
+        if self._spec is not None:
+            # an open draft window (positions advanced past the last
+            # verified token) must not leak into the swap state — roll
+            # the row back to its window base and drop the draft buffer
+            self._spec.rollback_open(slot)
         tier = self.slot_k[slot]
         self._tier_reserved[tier] -= self.pool.reserved_for(slot)
         state = self.pool.swap_out(slot)
@@ -736,8 +830,19 @@ class ServingEngine:
                 booked_by_tier[tier] = booked_by_tier.get(tier, 0) + need
                 return True
         assignments = self.scheduler.admit(free, self.slot_k, can_admit)
-        groups: Dict[Tuple[int, Optional[int]],
-                     List[Tuple[Request, int]]] = {}
+        # group rows into (kind, bucket key, tier) prefill batches.
+        # "full" groups key on exact prompt length and run the plain
+        # prefill.  Under suffix prefill the match runs NOW
+        # (attach_prefix, in admission order so same-pass duplicates
+        # share); rows with a usable matched head form "suffix" groups
+        # keyed by the power-of-two SUFFIX bucket — a flash crowd of
+        # long shared-head prompts collapses into small buckets and
+        # O(log max_suffix) compiled variants — while cold misses
+        # (suffix == whole prompt) take the exact-length full-prefill
+        # path, identical launches to a cold engine's.  Items carry
+        # (request, slot, suffix start, matched tokens).
+        groups: Dict[Tuple[str, int, Optional[int]],
+                     List[Tuple[Request, int, int, int]]] = {}
         for req, slot in assignments:
             self.pool.take(slot)
             if self.paged:
@@ -765,32 +870,102 @@ class ServingEngine:
             assert req.prompt_len + 1 <= self.slot_len, \
                 f"request {req.rid}: prompt {req.prompt_len} leaves no room" \
                 f" in a {self.slot_len}-token slot"
-            groups.setdefault((req.prompt_len, self.slot_k[slot]),
-                              []).append((req, slot))
+            if self._use_suffix:
+                L = req.prompt_len
+                covered, ready = self.pool.attach_prefix(
+                    slot, req.prompt, L, _tier_salt(self.slot_k[slot]))
+                # suffix start: round the READY span (pages written and
+                # readable in-graph) down to block granularity — the
+                # per-row cache-validity mask is idx < sstart, so it must
+                # not admit a partially matched block's foreign tail.
+                # Floored at L-1: a full-match prompt still runs a
+                # 1-token suffix step, so its first sampled token comes
+                # from real logits, never a skipped sample.
+                bs = self.pool.block_size
+                sstart = min((ready // bs) * bs, L - 1)
+                key = (("suffix", _bucket(L - sstart))
+                       if sstart > 0 else ("full", L))
+                groups.setdefault(
+                    key + (self.slot_k[slot],),
+                    []).append((req, slot, sstart, covered))
+            else:
+                groups.setdefault(
+                    ("full", req.prompt_len, self.slot_k[slot]),
+                    []).append((req, slot, 0, 0))
 
-        for (L, kk), items in groups.items():
+        for (kind, width, kk), items in groups.items():
             nb = len(items)
             bucket = _bucket(nb)
-            prompts = np.stack([r.prompt for r, _ in items]
-                               + [items[0][0].prompt] * (bucket - nb))
             admitted = self._now()
             real = jnp.asarray(np.arange(bucket) < nb, jnp.float32)
-            logits, cache = self._prefill_fn(
-                self.params, self._prefill_trainable(kk),
-                jnp.asarray(prompts), real, k=kk)
-            logits_np = np.asarray(logits)          # blocks until ready
-            self.pool.write([s for _, s in items], cache, [L] * nb,
-                            tokens=[r.prompt for r, _ in items])
+            if kind == "suffix":
+                # width == the group's suffix bucket; prompt lengths may
+                # differ within it.  Pad rows: empty table, prefix 0,
+                # suffix 1 — their gathers are fully masked (pos 0) and
+                # their outputs discarded.
+                toks = np.zeros((bucket, width), np.int32)
+                pref = np.zeros((bucket,), np.int32)
+                suf = np.ones((bucket,), np.int32)
+                # page-span bucket: only the blocks covering the group's
+                # deepest live prefix + the suffix are gathered in-graph
+                # (pow-2 to bound compile variants) — a short suffix on
+                # a short prefix must not pay a full-slot gather
+                bs = self.pool.block_size
+                span_b = min(_bucket(-(-(max(
+                    st for _, _, st, _ in items) + width) // bs)),
+                    self.pool.blocks_per_slot)
+                tbl = np.zeros((bucket, span_b), np.int32)
+                for j, (req, slot, sstart, _cov) in enumerate(items):
+                    n = req.prompt_len - sstart
+                    toks[j, :n] = np.asarray(req.prompt[sstart:], np.int32)
+                    pref[j], suf[j] = sstart, n
+                    tbl[j] = self.pool.block_table[slot][:span_b]
+                logits, piece = self._suffix_prefill_fn(
+                    self.params, self._prefill_trainable(kk),
+                    self.pool.cache, jnp.asarray(toks), jnp.asarray(tbl),
+                    jnp.asarray(pref), jnp.asarray(suf), real, k=kk)
+                logits_np = np.asarray(logits)      # blocks until ready
+                self.pool.write(
+                    [s for _, s, _, _ in items], piece,
+                    [r.prompt_len for r, _, _, _ in items],
+                    starts=[cov for _, _, _, cov in items],
+                    piece_col0=[st for _, _, st, _ in items])
+                report.prefill_tokens += int(suf[:nb].sum())
+                targs = {"batch": nb, "bucket": bucket,
+                         "suffix_bucket": width}
+            else:
+                prompts = np.stack([r.prompt for r, _, _, _ in items]
+                                   + [items[0][0].prompt] * (bucket - nb))
+                logits, cache = self._prefill_fn(
+                    self.params, self._prefill_trainable(kk),
+                    jnp.asarray(prompts), real, k=kk)
+                logits_np = np.asarray(logits)      # blocks until ready
+                if self._use_suffix:
+                    # match/attach/alloc already ran at assignment time:
+                    # scatter past the matched span only (a same-batch
+                    # duplicate recomputes its whole prompt — pending
+                    # pages aren't readable in-graph — but must not
+                    # rewrite the shared blocks it attached)
+                    self.pool.write(
+                        [s for _, s, _, _ in items], cache, [width] * nb,
+                        starts=[cov for _, _, _, cov in items])
+                else:
+                    self.pool.write(
+                        [s for _, s, _, _ in items], cache, [width] * nb,
+                        tokens=[r.prompt for r, _, _, _ in items],
+                        salt=_tier_salt(kk))
+                report.prefill_tokens += nb * width
+                targs = {"batch": nb, "bucket": bucket,
+                         "prompt_len": width}
             tft = self._now()
             report.prefill_s.append(tft - admitted)
             report.prefill_hist.observe((tft - admitted) * 1e3)
             if self._tracer.enabled:
+                targs["k"] = kk if kk is not None else 0
                 self._tracer.complete("prefill", admitted, tft, cat="engine",
-                                      args={"batch": nb, "bucket": bucket,
-                                            "prompt_len": L,
-                                            "k": kk if kk is not None else 0})
+                                      args=targs)
 
-            for j, (req, slot) in enumerate(items):
+            for j, (req, slot, _st, _cov) in enumerate(items):
                 max_new = self._max_new(req)
                 a = _ActiveSlot(
                     req=req, tokens=[], nll=0.0, admitted=admitted,

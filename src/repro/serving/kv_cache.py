@@ -55,6 +55,7 @@ head_dim)``.
 from __future__ import annotations
 
 import hashlib
+from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -64,6 +65,37 @@ import numpy as np
 from ..models import model as model_lib
 
 PyTree = Any
+
+
+@partial(jax.jit, static_argnames=("segs",), donate_argnums=(0,))
+def _fused_scatter(cache, piece, blks, offs, row_idx, segs):
+    """One device program per :meth:`BlockPool.write`: every (segment,
+    leaf) scatter plus the per-row SSM installs, with the pool donated so
+    the update happens in place.  Eagerly, each ``.at[].set`` is its own
+    dispatch AND a full-pool copy — at serving scale that fixed host cost
+    swamps the data actually written, burying exactly the saving
+    suffix-only prefill exists to surface.  ``segs`` is the static
+    segment structure ``((start, n_cols, piece_col0, row_js), ...)``;
+    ``blks``/``offs`` are per-segment (rows, cols) index arrays."""
+    def put_paged(pool, pc):
+        for i, (st, nc, c0, js) in enumerate(segs):
+            pool = pool.at[:, blks[i], offs[i]].set(
+                pc[:, np.asarray(js), st - c0:nc - c0].astype(pool.dtype))
+        return pool
+
+    def put_rows(pool, pc):
+        return pool.at[:, row_idx].set(
+            pc[:, :row_idx.shape[0]].astype(pool.dtype))
+
+    out = {}
+    for pos_key, c in cache.items():
+        if "attn" in c:
+            out[pos_key] = {"attn": jax.tree.map(
+                put_paged, c["attn"], piece[pos_key]["attn"])}
+        else:
+            out[pos_key] = {"ssm": jax.tree.map(
+                put_rows, c["ssm"], piece[pos_key]["ssm"])}
+    return out
 
 
 class _RowPool:
@@ -180,17 +212,19 @@ class SlotPool(_RowPool):
     # ------------------------------------------------------------- cache I/O
     def write(self, slots: Sequence[int], piece: PyTree,
               lengths: Sequence[int],
-              tokens: Optional[Sequence[np.ndarray]] = None) -> None:
+              tokens: Optional[Sequence[np.ndarray]] = None,
+              salt: bytes = b"") -> None:
         """Install a freshly prefilled cache into ``slots``.
 
         ``piece``: a cache tree with batch size ``>= len(slots)`` on axis 1
         (extra rows — prefill bucket padding — are ignored);
         ``lengths``: per-slot prompt length, i.e. the position the first
-        decode step will write.  ``tokens`` (the per-slot prompt ids) is
-        accepted for signature parity with :meth:`BlockPool.write` and
-        ignored — the slotted layout has no block sharing to key.
+        decode step will write.  ``tokens`` (the per-slot prompt ids) and
+        ``salt`` are accepted for signature parity with
+        :meth:`BlockPool.write` and ignored — the slotted layout has no
+        block sharing to key.
         """
-        del tokens
+        del tokens, salt
         self._require_live(slots)
         idx = np.asarray(list(slots), np.int32)
         nb = len(idx)
@@ -266,6 +300,14 @@ class BlockPool(_RowPool):
         # content-addressed prefix index: chained digest <-> block id
         self._cache_map: Dict[bytes, int] = {}
         self._block_key: Dict[int, bytes] = {}
+        # blocks registered in the index whose content is still queued for
+        # a future :meth:`write` scatter: the engine attaches prefixes for
+        # a whole admission pass BEFORE any group's prefill runs, so a
+        # same-pass match on these must not read their pages in-graph —
+        # :meth:`attach_prefix` reports the leading already-written span
+        # (``ready``) separately from the matched span (``covered``)
+        self._pending_blocks: set = set()
+        self._pending_by_slot: Dict[int, List[int]] = {}
         # observability counters (prefix_stats / ServingReport)
         self.prefix_hit_blocks = 0
         self.prefix_hit_tokens = 0
@@ -457,6 +499,13 @@ class BlockPool(_RowPool):
     def release(self, slot: int) -> None:
         """Evict a finished request: drop every table entry (refcount-
         aware), clear the reservation, and free the row."""
+        # a row released before its write scattered (shouldn't happen in
+        # the engine's attach→write window, but stay safe) must drop its
+        # pending index entries — the pages were never materialised
+        for bid in self._pending_by_slot.pop(slot, []):
+            if bid in self._pending_blocks:
+                self._pending_blocks.discard(bid)
+                self._evict_entry(bid)
         for idx in range(int(self._nalloc[slot])):
             self._detach_block(slot, idx)
         self.block_table[slot, :] = 0
@@ -512,20 +561,33 @@ class BlockPool(_RowPool):
                 f"prefix index: block {bid} map/reverse-map mismatch"
             assert 1 <= bid <= self.num_blocks
         assert len(self._cache_map) == len(self._block_key)
+        listed = {b for bl in self._pending_by_slot.values() for b in bl}
+        for bid in self._pending_blocks:
+            assert bid in self._block_key, \
+                f"pending block {bid} lost its index entry"
+            assert int(self._ref[bid]) >= 1, \
+                f"pending block {bid} is not allocated"
+            assert bid in listed, f"pending block {bid} owned by no slot"
         assert self.available_blocks >= 0
 
     # --------------------------------------------------------- prefix cache
-    def _prefix_keys(self, toks: np.ndarray
+    def _prefix_keys(self, toks: np.ndarray, salt: bytes = b""
                      ) -> Tuple[List[bytes], Optional[bytes]]:
         """Chained content digests for a prompt: one per FULL block (each
         digest covers the whole prefix up to that block), plus a distinct
         digest for the partial tail block when the prompt doesn't end on
         a block boundary.  Chaining makes a block's key identify its
-        entire prefix, so matching is a simple walk."""
+        entire prefix, so matching is a simple walk.
+
+        ``salt`` seeds the chain: a block's K/V is a function of the
+        tokens AND of everything else that shaped the forward pass — for
+        the adaptive-k engine, the slot's expert budget.  The engine
+        salts with the tier, so equal prompts served at different ``k``
+        never alias each other's (numerically different) pages."""
         toks = np.ascontiguousarray(np.asarray(toks, np.int32))
         bs = self.block_size
         keys: List[bytes] = []
-        h = b"prefix:"
+        h = b"prefix:" + salt
         for i in range(len(toks) // bs):
             h = hashlib.sha1(h + toks[i * bs:(i + 1) * bs].tobytes()) \
                 .digest()
@@ -537,14 +599,14 @@ class BlockPool(_RowPool):
             ).digest()
         return keys, tail
 
-    def _match_prefix(self, toks: np.ndarray
+    def _match_prefix(self, toks: np.ndarray, salt: bytes = b""
                       ) -> Tuple[List[int], int]:
         """Longest cached chain matching the prompt: the block ids to
         attach and the token count they cover.  The partial tail block is
         only shareable when the ENTIRE prompt matches a cached partial
         chain — a borrower must never scatter its own K/V into a block
         other rows read."""
-        keys, tail = self._prefix_keys(toks)
+        keys, tail = self._prefix_keys(toks, salt)
         bids: List[int] = []
         for key in keys:
             bid = self._cache_map.get(key)
@@ -559,19 +621,72 @@ class BlockPool(_RowPool):
                 covered = len(toks)
         return bids, covered
 
-    def _register_prefix(self, slot: int, toks: np.ndarray) -> None:
+    def _register_prefix(self, slot: int, toks: np.ndarray,
+                         salt: bytes = b"") -> List[int]:
         """Index the freshly written prompt blocks of ``slot`` so later
         requests can share them.  Blocks already carrying a key (the
-        attached shared prefix itself) are left as they are."""
-        keys, tail = self._prefix_keys(toks)
+        attached shared prefix itself) are left as they are.  Returns the
+        block ids newly added to the index (== the slot's freshly
+        allocated prompt blocks)."""
+        keys, tail = self._prefix_keys(toks, salt)
         if tail is not None:
             keys = keys + [tail]
+        fresh: List[int] = []
         for i, key in enumerate(keys):
             bid = int(self.block_table[slot, i])
             if key in self._cache_map or bid in self._block_key:
                 continue
             self._cache_map[key] = bid
             self._block_key[bid] = key
+            fresh.append(bid)
+        return fresh
+
+    def attach_prefix(self, slot: int,
+                      toks: Optional[np.ndarray],
+                      prompt_len: int,
+                      salt: bytes = b"") -> Tuple[int, int]:
+        """Match ``slot``'s prompt against the prefix index, attach the
+        matched chain, allocate the remaining prompt blocks, and register
+        the fresh ones — everything :meth:`write` used to do per slot
+        except the K/V scatter itself.  Returns ``(covered, ready)``:
+
+        * ``covered`` — tokens the attached chain holds (the scatter may
+          start there; real matched tokens, never rounded up to blocks);
+        * ``ready`` — the leading part of ``covered`` whose pages are
+          already *written* (non-pending).  A suffix-only prefill may
+          read attached pages strictly below ``ready`` in-graph; pages in
+          ``[ready, covered)`` were registered by a not-yet-written slot
+          in this same admission pass, so their content must be
+          recomputed (but still not re-scattered).
+
+        Pending blocks are always a *suffix* of any matched chain: a
+        digest maps to exactly one block, so if chain position ``i`` is
+        pending its key was new this pass — and then position ``i+1``'s
+        chained digest cannot have existed before either.
+        """
+        self._require_live([slot])
+        covered = ready = 0
+        if self.prefix_cache and toks is not None:
+            toks = np.asarray(toks, np.int32)[:prompt_len]
+            bids, covered = self._match_prefix(toks, salt)
+            n_ready = 0
+            for bid in bids:
+                if bid in self._pending_blocks:
+                    break
+                n_ready += 1
+            ready = (covered if n_ready == len(bids)
+                     else n_ready * self.block_size)
+            for bid in bids:
+                self._attach_block(slot, bid)
+            self.prefix_hit_blocks += len(bids)
+            self.prefix_hit_tokens += covered
+        self.alloc_prompt(slot, prompt_len)
+        if self.prefix_cache and toks is not None:
+            fresh = self._register_prefix(slot, toks, salt)
+            if fresh:
+                self._pending_blocks.update(fresh)
+                self._pending_by_slot.setdefault(slot, []).extend(fresh)
+        return covered, ready
 
     def prefix_stats(self) -> Dict[str, int]:
         """Prefix-cache observability counters (cumulative)."""
@@ -605,13 +720,18 @@ class BlockPool(_RowPool):
         per-row SSM state) to host memory, then release the row — blocks,
         reservation and all.  Returns the opaque state :meth:`swap_in`
         restores.  Shared prefix blocks are copied too (the resumed row
-        comes back fully private — re-sharing after a round trip is a
-        possible follow-up, not a correctness requirement)."""
+        comes back fully private, but swap_in re-registers its prompt
+        blocks wherever their keys are still unclaimed, so a round trip
+        does not cost the row its shareability)."""
         if slot in self._free:
             raise ValueError(
                 f"{type(self).__name__}.swap_out({slot}): slot is free")
         n = int(self._nalloc[slot])
         bids = np.asarray(self.block_table[slot, :n], np.int32)
+        # each block's prefix key rides along so swap_in can re-register
+        # the surviving prompt blocks — a round trip must not cost the
+        # row its shareability
+        keys = [self._block_key.get(int(b)) for b in bids]
         blocks: Dict[str, PyTree] = {}
         rows: Dict[str, PyTree] = {}
         for pos_key, c in self.cache.items():
@@ -622,7 +742,7 @@ class BlockPool(_RowPool):
                 rows[pos_key] = jax.tree.map(
                     lambda leaf: np.asarray(leaf[:, slot]), c["ssm"])
         state = {"cache_pos": int(self.cache_pos[slot]), "n_blocks": n,
-                 "attn": blocks, "ssm": rows}
+                 "attn": blocks, "ssm": rows, "keys": keys}
         self.swap_outs += 1
         self.release(slot)
         return state
@@ -655,12 +775,35 @@ class BlockPool(_RowPool):
                     c["ssm"], state["ssm"][pos_key])}
         self.cache = new_cache
         self.cache_pos[slot] = state["cache_pos"]
+        # re-register the restored prompt blocks under their saved keys:
+        # without this a preempted-and-resumed request's shared head
+        # silently stops being shareable.  A key may have been re-created
+        # by another LIVE row while this one was swapped out — that copy
+        # wins.  But if the key only survives on a free-but-cached block
+        # (typically this row's own pre-swap blocks), re-point it to the
+        # live restored copy: a free block can be reclaimed any moment,
+        # while this one is pinned for the request's remaining lifetime.
+        if self.prefix_cache:
+            for i, key in enumerate(state.get("keys") or []):
+                bid = int(self.block_table[slot, i])
+                if key is None or bid in self._block_key:
+                    continue
+                old = self._cache_map.get(key)
+                if old is not None:
+                    if self._ref[old] > 0:
+                        continue
+                    del self._block_key[old]
+                self._cache_map[key] = bid
+                self._block_key[bid] = key
         self.swap_ins += 1
 
     # ------------------------------------------------------------- cache I/O
     def write(self, slots: Sequence[int], piece: PyTree,
               lengths: Sequence[int],
-              tokens: Optional[Sequence[np.ndarray]] = None) -> None:
+              tokens: Optional[Sequence[np.ndarray]] = None,
+              starts: Optional[Sequence[int]] = None,
+              piece_col0: Optional[Sequence[int]] = None,
+              salt: bytes = b"") -> None:
         """Install freshly prefilled caches into ``slots``.
 
         ``piece`` is a contiguous (slotted-layout) cache tree with batch
@@ -677,66 +820,64 @@ class BlockPool(_RowPool):
         written blocks are indexed for the next request.  Same-prompt
         requests admitted in ONE batch share too: matching runs per slot
         in admission order.
+
+        ``starts``/``piece_col0`` (the engine's suffix-prefill path):
+        when given, the match/attach/alloc/register step already ran via
+        :meth:`attach_prefix` — ``piece`` holds only the recomputed
+        suffix, whose column 0 is prompt position ``piece_col0[j]``, and
+        scattering begins at ``starts[j]`` (the matched span: the
+        attached blocks already hold everything before it).
         """
         slots = [int(s) for s in slots]
         lengths = [int(n) for n in lengths]
         self._require_live(slots)
-        starts: List[int] = []
-        for j, (s, L) in enumerate(zip(slots, lengths)):
-            start = 0
-            if self.prefix_cache and tokens is not None:
-                toks = np.asarray(tokens[j], np.int32)[:L]
-                bids, covered = self._match_prefix(toks)
-                for bid in bids:
-                    self._attach_block(s, bid)
-                start = covered
-                self.prefix_hit_blocks += len(bids)
-                self.prefix_hit_tokens += covered
-            self.alloc_prompt(s, L)
-            if self.prefix_cache and tokens is not None:
-                # index this prompt's blocks NOW (content is scattered
-                # below, before anything reads them) so identical prompts
-                # later in this same batch already share
-                self._register_prefix(s, np.asarray(tokens[j], np.int32)[:L])
-            starts.append(start)
+        if starts is None:
+            starts = []
+            for j, (s, L) in enumerate(zip(slots, lengths)):
+                toks = None if tokens is None else tokens[j]
+                covered, _ready = self.attach_prefix(s, toks, L, salt)
+                starts.append(covered)
+            piece_col0 = [0] * len(slots)
+        else:
+            starts = [int(v) for v in starts]
+            piece_col0 = ([0] * len(slots) if piece_col0 is None
+                          else [int(v) for v in piece_col0])
 
         bs = self.block_size
         n_cols = [min(L, self.attn_len) for L in lengths]
         row_idx = np.asarray(slots, np.int32)
 
-        # one scatter per ((start, n_cols) group, leaf), vectorised across
-        # slots — a per-slot .at[].set chain would copy the whole pool
-        # array once per slot on the host.  ``start`` skips the columns a
-        # shared prefix already holds (start == n_cols: nothing to write).
-        by_seg: Dict[Tuple[int, int], List[int]] = {}
-        for j, (st, nc) in enumerate(zip(starts, n_cols)):
+        # one scatter per ((start, n_cols, piece-offset) group, leaf),
+        # vectorised across slots and fused into a single donated device
+        # program (_fused_scatter) — a per-slot .at[].set chain would
+        # copy the whole pool array once per slot, and even per-segment
+        # eager ops pay a fixed dispatch+copy cost that dwarfs small
+        # suffix writes.  ``start`` skips the columns a shared prefix
+        # already holds (start == n_cols: nothing to write).
+        by_seg: Dict[Tuple[int, int, int], List[int]] = {}
+        for j, (st, nc, c0) in enumerate(zip(starts, n_cols, piece_col0)):
             if st < nc:
-                by_seg.setdefault((st, nc), []).append(j)
+                by_seg.setdefault((st, nc, c0), []).append(j)
 
-        def put_paged(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
-            for (st, nc), js in by_seg.items():
-                cols = np.arange(st, nc)
-                blks = np.stack([self.block_table[slots[j], cols // bs]
-                                 for j in js])              # (nb, nc-st)
-                offs = np.broadcast_to(cols % bs, blks.shape)
-                pool = pool.at[:, blks, offs].set(
-                    pc[:, np.asarray(js), st:nc].astype(pool.dtype))
-            return pool
-
-        def put_rows(pool: jnp.ndarray, pc: jnp.ndarray) -> jnp.ndarray:
-            return pool.at[:, row_idx].set(
-                pc[:, :len(slots)].astype(pool.dtype))
-
-        new_cache: Dict[str, PyTree] = {}
-        for pos_key, c in self.cache.items():
-            if "attn" in c:
-                new_cache[pos_key] = {"attn": jax.tree.map(
-                    put_paged, c["attn"], piece[pos_key]["attn"])}
-            else:
-                new_cache[pos_key] = {"ssm": jax.tree.map(
-                    put_rows, c["ssm"], piece[pos_key]["ssm"])}
-        self.cache = new_cache
+        segs, blks_l, offs_l = [], [], []
+        for (st, nc, c0), js in by_seg.items():
+            cols = np.arange(st, nc)
+            blks = np.stack([self.block_table[slots[j], cols // bs]
+                             for j in js])                  # (nb, nc-st)
+            offs = np.ascontiguousarray(
+                np.broadcast_to(cols % bs, blks.shape))
+            segs.append((st, nc, c0, tuple(js)))
+            blks_l.append(jnp.asarray(blks))
+            offs_l.append(jnp.asarray(offs))
+        self.cache = _fused_scatter(
+            self.cache, piece, tuple(blks_l), tuple(offs_l),
+            jnp.asarray(row_idx), segs=tuple(segs))
         self.cache_pos[row_idx] = np.asarray(lengths, np.int32)
+        # the scatter above materialises every registration these rows
+        # left pending: their pages are now readable by later passes
+        for s in slots:
+            for bid in self._pending_by_slot.pop(s, []):
+                self._pending_blocks.discard(bid)
 
     # ------------------------------------------------------------ reporting
     def block_bytes(self) -> int:

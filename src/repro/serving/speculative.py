@@ -42,7 +42,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -162,6 +162,13 @@ class SpeculativeDecoder:
         self.window = spec.window
         self.draft_k = spec.draft_k
         self._np_keys = {}                 # rid -> host copy of base key
+        # slot -> window base position (the last verified cache_pos)
+        # while that slot's draft window is OPEN: set when the round
+        # advances positions for the draft/verify, cleared as each
+        # slot's window resolves (advance or truncate).  A preemption
+        # swapping the slot out mid-window rolls back through
+        # rollback_open so the swap state never carries draft positions.
+        self._open: Dict[int, int] = {}
         self._draft_fn = self._build_draft_window_fn()
         self._verify_fn = engine._build_verify_fn()
         self._draft_trainable = engine._build_draft_trainable(spec.draft_k)
@@ -285,6 +292,8 @@ class SpeculativeDecoder:
             [a is not None for a in eng._active], jnp.float32)
         pos0 = pool.cache_pos.copy()                       # (B,)
         first = eng._last_tok.copy()                       # (B, 1)
+        for s in active:
+            self._open[s] = int(pos0[s])
 
         # ---- draft: one fused launch covering W cheap read-only steps ----
         t0 = time.perf_counter()
@@ -348,6 +357,7 @@ class SpeculativeDecoder:
             eng._last_tok[s, 0] = emitted[-1]
             report.spec_drafted += W
             report.spec_accepted += acc
+            self._open.pop(s, None)        # window resolved below
             if acc == W:
                 # position pos0+W holds the ACCEPTED last draft's K/V —
                 # keep it and advance past it (the bonus token's K/V is
@@ -358,3 +368,20 @@ class SpeculativeDecoder:
             if len(a.tokens) >= a.max_new or pool.slot_full(s):
                 eng._finish(s, report)
         report.spec_rounds += 1
+
+    def rollback_open(self, slot: int) -> None:
+        """Preemption safety: if ``slot`` is being swapped out while its
+        draft window is open (cache positions advanced past the last
+        verified token for the in-flight draft/verify), roll the row
+        back to the window base and forget the draft state — swap_out
+        then captures exactly the verified prefix, and the resumed
+        request re-enters decoding as if the round never started.
+
+        A no-op in the normal engine loop: :meth:`round` is atomic with
+        respect to admission (``_admit`` runs between rounds), so every
+        window it opens is resolved before a preemption can fire.  The
+        hook is what makes that atomicity a guarantee rather than an
+        accident of control flow."""
+        base = self._open.pop(slot, None)
+        if base is not None:
+            self.eng.pool.truncate_to(slot, base)

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from conftest import tiny_moe
+from repro.configs.base import KernelConfig
 from repro.serving import (BlockPool, Request, Scheduler, ServingEngine,
                            SpeculativeConfig, WorkloadConfig, make_trace)
 from repro.serving.engine import ServingReport
@@ -386,6 +387,193 @@ def test_prefix_cache_with_speculation_parity():
     eng.pool.check_invariants()
 
 
+def test_suffix_prefill_matches_cold_across_match_shapes():
+    """Suffix-only prefill == cold full prefill token-for-token across
+    every match shape: cold miss, same-batch duplicate (pending blocks →
+    full recompute, skipped write), cross-batch full match on a block
+    boundary (1-token suffix), full match through a partial tail block
+    (block-rounded suffix), head-only partial match, and a longer prompt
+    extending a cached head — with exact hit-token and prefill-token
+    accounting."""
+    bs = 4
+    head = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    B = RNG.integers(0, CFG.vocab_size, (6,)).astype(np.int32)
+    Abig = np.concatenate(
+        [head, RNG.integers(0, CFG.vocab_size, (4,))]).astype(np.int32)
+    C = np.concatenate(
+        [B[:4], RNG.integers(0, CFG.vocab_size, (4,))]).astype(np.int32)
+    mk = [                                       # (prompt, k, arrival)
+        # sharing pairs sit in the SAME tier: pages are tier-salted
+        # (K/V depend on the expert budget), so only same-k requests
+        # may alias — test_prefix_cache_is_tier_scoped covers cross-k
+        (head, 2, 0.0),          # r0: cold miss, edge-of-block length
+        (B, 1, 0.0),             # r1: cold miss, partial-tail length
+        (head.copy(), 2, 0.0),   # r2: same-batch dup — pending, suffix 8
+        (head.copy(), 2, 0.06),  # r3: full match at boundary — suffix 1
+        (B.copy(), 1, 0.06),     # r4: full match incl tail — suffix 2
+        (Abig, 2, 0.06),         # r5: extends cached head — suffix 4
+        (C, 1, 0.06),            # r6: head-only match (1 block) — suffix 4
+    ]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3, k=k, arrival=t)
+            for i, (p, k, t) in enumerate(mk)]
+    kw = dict(num_slots=4, slot_len=16, slot_k=(2, 2, 1, 1),
+              kv_layout="paged", block_size=bs, num_blocks=32)
+    cold = ServingEngine(CFG, PARAMS, **kw) \
+        .run([Request(**vars(r)) for r in reqs])
+    eng = ServingEngine(CFG, PARAMS, prefix_cache=True, **kw)
+    warm = eng.run([Request(**vars(r)) for r in reqs])
+
+    want, got = cold.tokens_by_rid(), warm.tokens_by_rid()
+    assert got.keys() == want.keys()
+    for rid in want:
+        np.testing.assert_array_equal(want[rid], got[rid])
+    # real matched tokens, not attached blocks: r2:8 r3:8 r4:6 r5:8 r6:4
+    assert warm.prefix["hit_tokens"] == 34
+    # computed prefill tokens follow the unmatched suffixes only:
+    # cold = sum of prompt lengths; warm = 8+6+8 cold misses, then the
+    # block-rounded suffixes 1 (full match, L-1 floor), 2, 4, 4
+    assert cold.prefill_tokens == sum(len(p) for p, _, _ in mk) == 56
+    assert warm.prefill_tokens == 33
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_in_use == 0
+
+
+def test_prefix_cache_is_tier_scoped():
+    """The same prompt served at different expert budgets must NOT share
+    pages: k changes every layer's hidden states, so k=1 pages are
+    numerically wrong for a k=2 reader.  The digest chain is salted with
+    the tier, so the 'duplicate' is a clean miss — and both requests
+    still match naive greedy decode at their own k."""
+    p = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=16,
+                        slot_k=(2, 1), kv_layout="paged", block_size=4,
+                        num_blocks=16, prefix_cache=True)
+    rep = eng.run([
+        Request(rid=0, prompt=p, max_new_tokens=3, k=1, arrival=0.0),
+        Request(rid=1, prompt=p.copy(), max_new_tokens=3, k=2,
+                arrival=0.05),
+    ])
+    got = rep.tokens_by_rid()
+    for rid, k in ((0, 1), (1, 2)):
+        np.testing.assert_array_equal(
+            got[rid], naive_decode(CFG, PARAMS, p[None], 3, k)[0])
+    assert rep.prefix["hit_tokens"] == 0         # no cross-tier aliasing
+    # both prompts prefilled in full — no suffix saving across tiers
+    assert rep.prefill_tokens == 16
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_in_use == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_suffix_prefill_differential_backends(backend):
+    """The suffix-prefill differential per kernel backend (the CI slow
+    subset runs this): prefix-cached engine == cold paged engine on a
+    mixed-tier shared-head trace with cross-batch duplicates."""
+    cfg = tiny_moe(kernels=KernelConfig(backend=backend))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _shared_prefix_trace(n=6, lens=(6, 8), new=(2, 3), seed=11)
+    for r in reqs[-2:]:
+        r.arrival = 0.05         # the exact duplicates arrive a beat
+        #                          later: full matches against WRITTEN
+        #                          blocks, i.e. real suffix savings
+    kw = dict(num_slots=4, slot_len=16, slot_k=(2, 2, 1, 1),
+              kv_layout="paged", block_size=4)
+    cold = ServingEngine(cfg, params, **kw) \
+        .run([Request(**vars(r)) for r in reqs])
+    warm = ServingEngine(cfg, params, prefix_cache=True, **kw) \
+        .run([Request(**vars(r)) for r in reqs])
+    want, got = cold.tokens_by_rid(), warm.tokens_by_rid()
+    assert got.keys() == want.keys()
+    for rid in want:
+        np.testing.assert_array_equal(want[rid], got[rid])
+    assert warm.prefix["hit_tokens"] > 0
+    assert warm.prefill_tokens < cold.prefill_tokens
+
+
+def test_suffix_buckets_compile_log_not_linear():
+    """A shared-head flash crowd with every distinct prompt length maps
+    to O(log max_suffix) compiled suffix-prefill variants — the pow-2
+    suffix bucket, not the prompt length, keys the compile cache."""
+    head = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    reqs = [Request(rid=0, prompt=head, max_new_tokens=2, k=1,
+                    arrival=0.0)]
+    for i, L in enumerate(range(9, 16)):         # 7 distinct lengths
+        p = np.concatenate(
+            [head, RNG.integers(0, CFG.vocab_size, (L - 8,))]) \
+            .astype(np.int32)
+        reqs.append(Request(rid=1 + i, prompt=p, max_new_tokens=2, k=1,
+                            arrival=0.05))
+    eng = ServingEngine(CFG, PARAMS, num_slots=8, slot_len=24,
+                        slot_k=(1,) * 8, kv_layout="paged", block_size=4,
+                        num_blocks=64, prefix_cache=True)
+    rep = eng.run(reqs)
+    assert rep.prefix["hit_tokens"] == 7 * 8     # every crowd head hit
+    # 8 distinct prompt lengths compiled: seed suffix 8, then crowd
+    # suffixes 1..7 → pow-2 buckets {1, 2, 4, 8} across a handful of
+    # batch buckets — far below one variant per prompt length, and
+    # bounded by O(log max_suffix · log num_slots)
+    n_variants = eng._suffix_prefill_fn._cache_size()
+    assert n_variants <= 6, n_variants
+
+
+def test_swap_roundtrip_preserves_shareability():
+    """Satellite regression: a preempted-and-resumed request's prompt
+    blocks are re-registered in the prefix index on swap-in, so its
+    shared head hits exactly as it would have without the swap."""
+    pool = BlockPool(CFG, num_slots=2, slot_len=16, block_size=4,
+                     num_blocks=8, prefix_cache=True)
+    A = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    s = _admit(pool, A, 12)
+    pool.cache_pos[s] = 8
+    assert pool.prefix_stats()["hit_tokens"] == 0
+
+    state = pool.swap_out(s)
+    s2 = pool.allocate()
+    pool.reserve(s2, 12)
+    pool.swap_in(s2, state)                      # must re-register
+    pool.check_invariants()
+
+    s3 = _admit(pool, A.copy(), 12)              # duplicate after the swap
+    assert pool.prefix_stats()["hit_tokens"] == 8     # identical to no-swap
+    assert pool._nshared[s3] == 2                # really attached, not rebuilt
+    pool.check_invariants()
+    pool.release(s2), pool.release(s3)
+    assert pool.blocks_in_use == 0
+
+
+def test_spec_preemption_token_identical():
+    """Speculative decoding + preemption == plain greedy decode token for
+    token, with at least one real swap-out — the lifted constructor
+    guard is safe because an open draft window rolls back before the
+    swap captures state."""
+    eco_prompt = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    prm_prompt = RNG.integers(0, CFG.vocab_size, (8,)).astype(np.int32)
+    eco_new, prm_new = 40, 4
+    eng = ServingEngine(CFG, PARAMS, num_slots=2, slot_len=48,
+                        slot_k=(2, 1), kv_layout="paged", block_size=4,
+                        num_blocks=14, preemption=True,
+                        slo_ms={2: 0.0, 1: 60000.0},
+                        speculative=SpeculativeConfig(window=3, draft_k=1))
+    rep = eng.run([
+        Request(rid=0, prompt=eco_prompt, max_new_tokens=eco_new, k=1,
+                arrival=0.0),
+        Request(rid=1, prompt=prm_prompt, max_new_tokens=prm_new, k=2,
+                arrival=0.02),
+    ])
+    by_rid = {c.rid: c for c in rep.completions}
+    assert rep.preemptions >= 1
+    assert rep.spec_rounds >= 1                  # speculation really ran
+    np.testing.assert_array_equal(
+        by_rid[0].tokens, naive_decode(CFG, PARAMS, eco_prompt[None],
+                                       eco_new, 1)[0])
+    np.testing.assert_array_equal(
+        by_rid[1].tokens, naive_decode(CFG, PARAMS, prm_prompt[None],
+                                       prm_new, 2)[0])
+    eng.pool.check_invariants()
+    assert eng.pool.blocks_in_use == 0
+
+
 def test_engine_rejects_bad_traffic_combos():
     kw = dict(num_slots=2, slot_len=8, slot_k=(2, 1))
     with pytest.raises(ValueError, match="paged"):
@@ -397,10 +585,14 @@ def test_engine_rejects_bad_traffic_combos():
     with pytest.raises(ValueError, match="slo_ms"):
         ServingEngine(CFG, PARAMS, kv_layout="paged",
                       preemption=True, **kw)
-    with pytest.raises(ValueError):
-        ServingEngine(CFG, PARAMS, kv_layout="paged", preemption=True,
-                      slo_ms={1: 1.0},
-                      speculative=SpeculativeConfig(window=2), **kw)
+    # preemption + speculation is now a SUPPORTED combination: a swap-out
+    # of a slot with an open draft window rolls back to the last verified
+    # token first (SpeculativeDecoder.rollback_open), so construction
+    # must succeed (parity: test_spec_preemption_token_identical)
+    eng = ServingEngine(CFG, PARAMS, kv_layout="paged", preemption=True,
+                        slo_ms={1: 1.0},
+                        speculative=SpeculativeConfig(window=2), **kw)
+    assert eng._spec is not None and eng._preemption
 
 
 # ==========================================================================
