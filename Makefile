@@ -11,8 +11,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:
 	$(PYTHON) -m pytest -q --durations=15
 
-# tier-1 under coverage + the kernels/serving/obs line-coverage floor
-# (mirrors the CI coverage job; needs pytest-cov from requirements-ci.txt)
+# tier-1 under coverage + the kernels/serving/obs/federated line-coverage
+# floor (mirrors the CI coverage job; needs pytest-cov from
+# requirements-ci.txt)
 coverage:
 	$(PYTHON) -m pytest -q --cov=repro --cov-report=xml --cov-report=term
 	$(PYTHON) tools/coverage_gate.py coverage.xml --min 70 \
@@ -21,7 +22,8 @@ coverage:
 		repro/serving/kv_cache.py repro/serving/scheduler.py \
 		repro/serving/engine.py \
 		repro/obs/trace.py repro/obs/metrics.py \
-		repro/obs/expert_load.py
+		repro/obs/expert_load.py \
+		repro/federated/server.py repro/core/aggregation.py
 
 # the long-running randomized stress subset (CI runs it in the smoke job)
 test-slow:

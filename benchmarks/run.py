@@ -19,10 +19,10 @@ import inspect
 import json
 import time
 
-from . import (backend_bench, common, fig2_activation, fig3_temperature,
-               kernel_bench, round_engine_bench, serving_bench, table1_flops,
-               table2_budgets, table3_scale, table4_sampling, table5_rescaler,
-               telemetry_bench)
+from . import (backend_bench, common, federated_scale_bench, fig2_activation,
+               fig3_temperature, kernel_bench, round_engine_bench,
+               serving_bench, table1_flops, table2_budgets, table3_scale,
+               table4_sampling, table5_rescaler, telemetry_bench)
 
 ALL = {
     "table1": table1_flops.run,
@@ -35,12 +35,14 @@ ALL = {
     "kernels": kernel_bench.run,
     "backend": backend_bench.run,
     "round_engine": round_engine_bench.run,
+    "federated_scale": federated_scale_bench.run,
     "serving": serving_bench.run,
     "telemetry": telemetry_bench.run,
 }
 
-# CPU-fast subset for CI (`--smoke`): no pretraining, no federated rounds
-SMOKE = ["kernels", "backend", "serving", "telemetry"]
+# CPU-fast subset for CI (`--smoke`): no pretraining; federated_scale
+# self-limits to its 64-client row under smoke
+SMOKE = ["kernels", "backend", "serving", "telemetry", "federated_scale"]
 
 
 def main(argv=None) -> None:

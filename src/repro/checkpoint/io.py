@@ -49,12 +49,20 @@ def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
 
 
 def save(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+    """Atomic write: serialise to a sibling temp file, then ``os.replace``
+    into place — a crash mid-save (the streamed-checkpoint cadence of the
+    device round driver makes saves frequent) can never leave a truncated
+    archive behind the canonical name."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(jax.tree.map(np.asarray, tree))
-    np.savez(path, **flat)
+    final = path if path.endswith(".npz") else path + ".npz"
+    tmp = final + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
     if meta is not None:
-        with open(path + ".meta.json", "w") as f:
+        with open(path + ".meta.json.tmp", "w") as f:
             json.dump(meta, f, indent=2)
+        os.replace(path + ".meta.json.tmp", path + ".meta.json")
 
 
 def load(path: str) -> Tuple[PyTree, Optional[dict]]:

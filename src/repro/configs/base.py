@@ -227,3 +227,14 @@ class FederatedConfig:
     # "map" (lax.map) runs them sequentially inside one compiled call —
     # the fallback when C × local batch does not fit memory.
     cohort_backend: str = "vmap"      # vmap|map
+    # round-loop driver: "host" iterates run_round in Python (the oracle —
+    # one device program per cohort per round); "device" folds the whole
+    # multi-round loop, per-round subsampled cohorts AND streaming FLAME
+    # aggregation into ONE lax.scan program (FLAME only — see
+    # federated/server.py §device driver).
+    round_driver: str = "host"        # host|device
+    # device driver: rounds per device program segment — the driver syncs
+    # to the host every `checkpoint_every` rounds to stream a resumable
+    # checkpoint (run(checkpoint_to=...)); with no checkpoint target the
+    # whole run is one program.
+    checkpoint_every: int = 1

@@ -10,6 +10,17 @@
                           *stacked* client trees (leading client axis, the
                           batched round engine's output format); legacy
                           Python lists are stacked on entry.
+* ``flame_acc_*``       — the STREAMING form of the same aggregation:
+                          ``init → update (one cohort chunk at a time) →
+                          merge (hierarchical combination) → finalize``.
+                          The accumulator holds only the weighted running
+                          sums (one fp32 copy of the adapter tree + the
+                          per-expert weight mass), so peak memory is
+                          O(largest chunk), not O(total clients) — the
+                          round driver's thousand-client substrate.
+                          ``finalize(streamed chunks) == flame_aggregate
+                          (all clients stacked)`` up to fp32 summation
+                          order (property-tested for arbitrary splits).
 * ``hlora_aggregate``   — HLoRA: zero-padded truncated adapters averaged with
                           per-rank-component sparsity weights.
 * ``flexlora_aggregate``— FlexLoRA: aggregate full ΔW = s·A_i·B_i, then SVD
@@ -24,7 +35,7 @@ dataset-size weighting.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -105,7 +116,8 @@ def _stack_freqs(client_freqs, n: int) -> Dict[str, jnp.ndarray]:
 def flame_aggregate(client_loras,
                     client_freqs,
                     dataset_sizes: Sequence[float],
-                    temperature: int) -> PyTree:
+                    temperature: int,
+                    prev_lora: Optional[PyTree] = None) -> PyTree:
     """Aggregate client LoRA trees with Eq. 6–7.
 
     Input contract (stacked form — the batched round engine's native output):
@@ -120,6 +132,13 @@ def flame_aggregate(client_loras,
       dicts (missing keys ⇒ zero frequency).
     * ``dataset_sizes``: length-``n`` vector |D_i| aligned with axis 0 of
       the stacked inputs.
+    * ``prev_lora``: the pre-round global adapter tree.  An expert whose
+      total weight mass Σ_i γ_i^j is zero — nobody activated it this round
+      (t ≥ 1) — has no well-defined weighted mean; with ``prev_lora`` the
+      server keeps the previous global adapter for that expert instead of
+      collapsing it toward zero (``0 / EPS``), which silently reset the
+      expert's accumulated state.  ``None`` preserves the legacy
+      zero-fill behaviour.
 
     Expert adapters (leaves under a ``moe/experts`` path, shape
     ``(n, n_periods, E, ...)``) receive per-expert weights
@@ -136,25 +155,140 @@ def flame_aggregate(client_loras,
              for pos, f in freqs.items()}
     w_size = sizes / jnp.maximum(sizes.sum(), EPS)
 
-    def aggregate(pos: str, node: PyTree, in_experts: bool):
+    def aggregate(pos: str, node: PyTree, prev: PyTree, in_experts: bool):
         """Recursively average one block position's stacked sub-tree."""
         if isinstance(node, dict):
-            return {k: aggregate(pos, v, in_experts or k == "experts")
+            return {k: aggregate(pos, v,
+                                 prev.get(k) if isinstance(prev, dict)
+                                 else None,
+                                 in_experts or k == "experts")
                     for k, v in node.items()}
         leaf = node.astype(jnp.float32)                    # (n, ...)
         if in_experts and pos in gamma:
             # leaf shape (n, n_periods, E, ...) <- weights (n, n_periods, E)
             g = gamma[pos]
             g = g.reshape(g.shape + (1,) * (leaf.ndim - 3))
-            denom = jnp.maximum(g.sum(0), EPS)
-            out = (leaf * g).sum(0) / denom
+            mass = g.sum(0)                                # (n_periods, E, 1…)
+            out = (leaf * g).sum(0) / jnp.maximum(mass, EPS)
+            if prev is not None:
+                out = jnp.where(mass > 0, out, prev.astype(jnp.float32))
         else:
             out = (leaf * w_size.reshape((n,) + (1,) * (leaf.ndim - 1))).sum(0)
         return out.astype(node.dtype)
 
-    blocks = {pos: aggregate(pos, node, in_experts=False)
+    prev_blocks = (prev_lora or {}).get("blocks", {})
+    blocks = {pos: aggregate(pos, node, prev_blocks.get(pos),
+                             in_experts=False)
               for pos, node in stacked_loras["blocks"].items()}
     return {"blocks": blocks}
+
+
+# --------------------------------------------------------------------------
+# streaming FLAME aggregation: init → update per chunk → merge → finalize
+# --------------------------------------------------------------------------
+#
+# The accumulator is a plain pytree (jit/scan-friendly):
+#
+#   {"num":      fp32 adapter tree, NO client axis — Σ_i w_i · leaf_i,
+#    "den_gamma": {pos: (n_periods, E)}  — Σ_i γ_i per expert position,
+#    "den_size": ()                      — Σ_i |D_i|}
+#
+# Expert leaves accumulate with w_i = γ_i^j = freq^t·|D_i|, everything else
+# with w_i = |D_i|; finalize divides by the matching denominator, so the
+# result equals ``flame_aggregate`` over all streamed clients stacked at
+# once — up to fp32 summation order — while only ever materialising one
+# chunk plus one adapter-tree-sized accumulator.
+
+def flame_acc_init(template_lora: PyTree) -> PyTree:
+    """Fresh accumulator shaped after one (unstacked) adapter tree."""
+    return {"num": jax.tree.map(
+                lambda l: jnp.zeros(l.shape, jnp.float32), template_lora),
+            "den_gamma": {},
+            "den_size": jnp.zeros((), jnp.float32)}
+
+
+def flame_acc_update(acc: PyTree, stacked_loras: PyTree, stacked_freqs,
+                     dataset_sizes, temperature: int) -> PyTree:
+    """Fold one chunk of clients (stacked form, axis 0 = client) into the
+    running sums.  A client with ``dataset_sizes[i] == 0`` contributes
+    nothing — the round driver's padding slots exploit this."""
+    sizes = jnp.asarray(dataset_sizes, jnp.float32)
+    n = sizes.shape[0]
+    stacked = _as_stacked(stacked_loras)
+    freqs = _stack_freqs(stacked_freqs, n)
+    gamma = {pos: (f.astype(jnp.float32) ** temperature)
+             * sizes[:, None, None] for pos, f in freqs.items()}
+
+    def add(pos: str, node: PyTree, num: PyTree, in_experts: bool):
+        if isinstance(node, dict):
+            return {k: add(pos, v, num[k], in_experts or k == "experts")
+                    for k, v in node.items()}
+        leaf = node.astype(jnp.float32)                    # (n, ...)
+        if in_experts and pos in gamma:
+            g = gamma[pos]
+            g = g.reshape(g.shape + (1,) * (leaf.ndim - 3))
+            return num + (leaf * g).sum(0)
+        return num + (leaf
+                      * sizes.reshape((n,) + (1,) * (leaf.ndim - 1))).sum(0)
+
+    num = {"blocks": {pos: add(pos, node, acc["num"]["blocks"][pos],
+                               in_experts=False)
+                      for pos, node in stacked["blocks"].items()}}
+    den_gamma = dict(acc["den_gamma"])
+    for pos, g in gamma.items():
+        den_gamma[pos] = den_gamma.get(
+            pos, jnp.zeros(g.shape[1:], jnp.float32)) + g.sum(0)
+    return {"num": num, "den_gamma": den_gamma,
+            "den_size": acc["den_size"] + sizes.sum()}
+
+
+def flame_acc_merge(a: PyTree, b: PyTree) -> PyTree:
+    """Hierarchical combination: two accumulators over disjoint client sets
+    merge by plain addition (weighted sums are associative) — the two-level
+    reduction the round driver applies across a round's cohorts."""
+    den_gamma = dict(a["den_gamma"])
+    for pos, g in b["den_gamma"].items():
+        den_gamma[pos] = (den_gamma[pos] + g if pos in den_gamma else g)
+    return {"num": jax.tree.map(jnp.add, a["num"], b["num"]),
+            "den_gamma": den_gamma,
+            "den_size": a["den_size"] + b["den_size"]}
+
+
+def flame_acc_finalize(acc: PyTree,
+                       prev_lora: Optional[PyTree] = None) -> PyTree:
+    """Divide the running sums by their weight mass → the global adapter.
+
+    Zero-mass experts (nobody activated them across every streamed chunk)
+    keep ``prev_lora``'s value when given — the same keep-previous guard as
+    ``flame_aggregate(prev_lora=...)``; a naive ``num / den`` would emit
+    NaN (0/0) straight into the global tree.  Output leaves take
+    ``prev_lora``'s dtypes when given, else stay fp32."""
+    den_gamma, den_size = acc["den_gamma"], acc["den_size"]
+
+    def rec(pos: str, num: PyTree, prev: PyTree, in_experts: bool):
+        if isinstance(num, dict):
+            return {k: rec(pos, v,
+                           prev.get(k) if isinstance(prev, dict) else None,
+                           in_experts or k == "experts")
+                    for k, v in num.items()}
+        if in_experts and pos in den_gamma:
+            den = den_gamma[pos]
+            den = den.reshape(den.shape + (1,) * (num.ndim - 2))
+            out = num / jnp.maximum(den, EPS)
+            fallback = (prev.astype(jnp.float32) if prev is not None
+                        else jnp.zeros_like(out))
+            out = jnp.where(den > 0, out, fallback)
+        else:
+            out = num / jnp.maximum(den_size, EPS)
+            if prev is not None:
+                out = jnp.where(den_size > 0, out,
+                                prev.astype(jnp.float32))
+        return out.astype(prev.dtype) if prev is not None else out
+
+    prev_blocks = (prev_lora or {}).get("blocks", {})
+    return {"blocks": {pos: rec(pos, node, prev_blocks.get(pos),
+                                in_experts=False)
+                       for pos, node in acc["num"]["blocks"].items()}}
 
 
 # --------------------------------------------------------------------------

@@ -139,6 +139,18 @@ def pad_plan(plan: BatchPlan, n_steps: int) -> BatchPlan:
                                            np.zeros((extra,), np.float32)]))
 
 
+def empty_plan(like: BatchPlan) -> BatchPlan:
+    """All-invalid plan with ``like``'s shapes — a padding *slot* in a
+    device-driver cohort (a cohort position with no real participant this
+    round).  Every step is invalid, so ``local_update`` returns its inputs
+    untouched with zero counts/tokens, and the slot's aggregation weight
+    (dataset size 0) excludes it from the global average entirely."""
+    return BatchPlan(tokens=np.zeros_like(like.tokens),
+                     labels=np.zeros_like(like.labels),
+                     mask=np.zeros_like(like.mask),
+                     valid=np.zeros_like(like.valid))
+
+
 def stack_plans(plans: Sequence[BatchPlan]) -> BatchPlan:
     """Stack per-client plans to (C, n_steps, B, S...) for ``cohort_update``,
     padding shorter plans (smaller shards) with invalid no-op steps.  All

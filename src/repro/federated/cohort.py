@@ -48,6 +48,32 @@ class Cohort:
         return self.key[1]
 
 
+def group_by_key(clients: Sequence[client_lib.ClientState],
+                 tc: TrainConfig,
+                 rank_of: Optional[Callable[[client_lib.ClientState], int]]
+                 = None) -> "OrderedGroups":
+    """Partition clients by cohort key, preserving first-appearance order.
+
+    Returns ``(key_order, members)`` where ``members[key]`` lists indices
+    into ``clients``.  Shared by :func:`build_cohorts` (one round's
+    participants) and the device round driver (the full registry, to fix
+    the static cohort-key set across every round of a scanned multi-round
+    program)."""
+    rank_of = rank_of or (lambda c: c.rank)
+    order: List[CohortKey] = []
+    members: dict = {}
+    for i, c in enumerate(clients):
+        key = cohort_key(c, tc, rank_of(c))
+        if key not in members:
+            members[key] = []
+            order.append(key)
+        members[key].append(i)
+    return order, members
+
+
+OrderedGroups = Tuple[List[CohortKey], dict]
+
+
 def build_cohorts(clients: Sequence[client_lib.ClientState],
                   tc: TrainConfig,
                   rank_of: Optional[Callable[[client_lib.ClientState], int]]
@@ -60,13 +86,5 @@ def build_cohorts(clients: Sequence[client_lib.ClientState],
     returned in first-appearance order, and every participant appears in
     exactly one cohort, so looping cohorts preserves the round's client
     coverage."""
-    rank_of = rank_of or (lambda c: c.rank)
-    order: List[CohortKey] = []
-    groups = {}
-    for i, c in enumerate(clients):
-        key = cohort_key(c, tc, rank_of(c))
-        if key not in groups:
-            groups[key] = Cohort(key=key, members=[])
-            order.append(key)
-        groups[key].members.append(i)
-    return [groups[k] for k in order]
+    order, members = group_by_key(clients, tc, rank_of)
+    return [Cohort(key=k, members=members[k]) for k in order]

@@ -17,17 +17,36 @@ Round execution (``fed.round_engine``):
   * ``"batched"`` (default) — participants are grouped into budget cohorts
     (see federated/cohort.py) and each cohort's local training runs as ONE
     compiled ``client.cohort_update`` call (vmap or lax.map over the client
-    axis).  For FLAME the per-cohort stacked adapters and activation counts
-    are concatenated along the client axis and fed to ``flame_aggregate``
-    directly — device-resident end-to-end.
+    axis).  For FLAME each cohort's stacked adapters and activation counts
+    stream into a running accumulator (``core.aggregation.flame_acc_*``)
+    as soon as the cohort finishes — device-resident end-to-end, with peak
+    aggregation memory bounded by one cohort, not the participant count.
   * ``"looped"`` — the sequential per-client reference oracle (one
     ``client.local_train`` per participant).  Kept as the correctness
     baseline; tests assert the batched path matches it allclose.
+
+Round-loop driver (``fed.round_driver``, FLAME only):
+
+  * ``"host"`` (default, the oracle) — ``run`` iterates :meth:`run_round`
+    in Python; every round re-traces nothing but still syncs to the host
+    between cohorts and rounds.
+  * ``"device"`` — the whole multi-round loop folds into ONE compiled
+    ``lax.scan`` program per checkpoint segment: per-round client
+    subsampling is pre-drawn on the host with the *same* RNG stream the
+    host loop uses (so participant sets match the oracle exactly), budget
+    cohorts are re-grouped per round against a static cohort-key set
+    (rounds where a cohort is short of its capacity run exact-no-op
+    padding slots with zero aggregation weight), client-local rescalers
+    live in a device-resident bank gathered/scattered by client slot, and
+    aggregation streams cohort accumulators merged hierarchically inside
+    the scan body.  ``run(checkpoint_to=...)`` syncs to the host every
+    ``fed.checkpoint_every`` rounds to stream a resume-compatible
+    checkpoint; otherwise the run is a single program.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +60,7 @@ from ..obs.expert_load import ActivationDriftTracker
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_TRACER, PID_FEDERATED, Tracer
 from . import client as client_lib
-from .cohort import build_cohorts
+from .cohort import CohortKey, build_cohorts, group_by_key
 
 PyTree = Any
 
@@ -131,8 +150,11 @@ class FederatedServer:
         m = self.fed.method
         r_full = max(cl.rank for cl in self.clients)
         if m == "flame":
+            # prev_lora: an expert nobody activated this round keeps the
+            # previous global adapter instead of collapsing to zero
             return agg.flame_aggregate(loras, freqs, sizes,
-                                       self.fed.temperature)
+                                       self.fed.temperature,
+                                       prev_lora=self.global_lora)
         if m == "trivial":
             r_min = min(cl.rank for cl in self.clients)
             small = agg.fedavg(loras, sizes)
@@ -166,16 +188,21 @@ class FederatedServer:
                         pid=PID_FEDERATED, cat="federated",
                         args={"participants": len(res.participating),
                               "method": self.fed.method})
-        if self._metrics is not None:
-            self._metrics.counter("fed.rounds").inc()
-            finite = [l for l in res.client_losses if np.isfinite(l)]
-            if finite:
-                self._metrics.gauge("fed.round.mean_loss").set(
-                    float(np.mean(finite)))
-            self._metrics.gauge("fed.participants").set(
-                len(res.participating))
-            self._drift.publish(self._metrics, res.activation_drift)
+        self._emit_round_metrics(res)
         return res
+
+    def _emit_round_metrics(self, res: RoundResult) -> None:
+        """Per-round metrics (repro.obs) — shared by the host loop and the
+        device driver's post-segment bookkeeping."""
+        if self._metrics is None:
+            return
+        self._metrics.counter("fed.rounds").inc()
+        finite = [l for l in res.client_losses if np.isfinite(l)]
+        if finite:
+            self._metrics.gauge("fed.round.mean_loss").set(
+                float(np.mean(finite)))
+        self._metrics.gauge("fed.participants").set(len(res.participating))
+        self._drift.publish(self._metrics, res.activation_drift)
 
     def _round_drift(self, res: RoundResult) -> Dict[str, Dict[str, Any]]:
         """Population activation signal for the round: the unweighted
@@ -221,10 +248,15 @@ class FederatedServer:
 
     def _run_round_batched(self, round_idx: int) -> RoundResult:
         """Batched round engine: one compiled cohort_update per budget
-        cohort; FLAME aggregation consumes the stacked outputs directly."""
+        cohort; FLAME aggregation streams each cohort's stacked outputs
+        into a running accumulator (core.aggregation.flame_acc_*), so the
+        round's peak aggregation footprint is one cohort plus one
+        adapter-tree-sized accumulator — it no longer grows with the
+        participant count."""
         parts = self._sample_participants()
         round_seed = self.fed.seed * 1000 + round_idx
         part_clients = [self.clients[i] for i in parts]
+        sizes = [float(c.dataset_size) for c in part_clients]
         cohorts = build_cohorts(part_clients, self.tc,
                                 rank_of=self._dist_rank)
 
@@ -232,8 +264,9 @@ class FederatedServer:
         loras_by_pos: Dict[int, PyTree] = {}
         freqs_by_pos: Dict[int, Dict[str, np.ndarray]] = {}
         losses_by_pos: Dict[int, float] = {}
-        # FLAME: cohort-stacked trees, concatenated on the client axis below
-        stacked_loras, stacked_freqs, stacked_order = [], [], []
+        # FLAME: streaming accumulator, fed cohort-by-cohort
+        flame_acc = (agg.flame_acc_init(self.global_lora)
+                     if self.fed.method == "flame" else None)
 
         tr = self._tracer
         for ci, co in enumerate(cohorts):
@@ -285,31 +318,23 @@ class FederatedServer:
                                      for p, f in freqs.items()}
 
             if self.fed.method == "flame":
-                stacked_loras.append(out_tr["lora"])
-                stacked_freqs.append(freqs)
-                stacked_order.extend(co.members)
+                # stream this cohort into the running sums — the stacked
+                # trees are released as soon as the update is consumed
+                flame_acc = agg.flame_acc_update(
+                    flame_acc, out_tr["lora"], freqs,
+                    jnp.asarray([sizes[pos] for pos in co.members],
+                                jnp.float32),
+                    self.fed.temperature)
             else:
                 for j, pos in enumerate(co.members):
                     loras_by_pos[pos] = jax.tree.map(lambda l, j=j: l[j],
                                                      out_tr["lora"])
 
-        sizes = [float(c.dataset_size) for c in part_clients]
         with tr.span("aggregate", pid=PID_FEDERATED, cat="federated",
                      args={"method": self.fed.method}):
             if self.fed.method == "flame":
-                # concatenate cohorts on the client axis — still
-                # device-resident
-                cat = (stacked_loras[0] if len(stacked_loras) == 1 else
-                       jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
-                                    *stacked_loras))
-                cat_freqs = {pos: jnp.concatenate([f[pos]
-                                                   for f in stacked_freqs],
-                                                  axis=0)
-                             for pos in (stacked_freqs[0] if stacked_freqs
-                                         else {})}
-                cat_sizes = [sizes[pos] for pos in stacked_order]
-                self.global_lora = self._aggregate(cat, cat_freqs, cat_sizes,
-                                                   parts)
+                self.global_lora = agg.flame_acc_finalize(
+                    flame_acc, prev_lora=self.global_lora)
             else:
                 loras = [loras_by_pos[i] for i in range(len(parts))]
                 freqs_l = [freqs_by_pos[i] for i in range(len(parts))]
@@ -322,6 +347,261 @@ class FederatedServer:
                           parts)
         self.history.append(res)
         return res
+
+    # ---------------------------------------------------- device round driver
+    def _device_validate(self) -> None:
+        """The device driver folds rounds into one lax.scan program — only
+        the FLAME path (streaming accumulator, uniform full-rank
+        distribution) lowers to it."""
+        if self.fed.method != "flame":
+            raise ValueError(
+                "round_driver='device' supports method='flame' only "
+                f"(got {self.fed.method!r}) — the compression baselines "
+                "need host-side rank surgery between rounds")
+        if self.fed.round_engine != "batched":
+            raise ValueError(
+                "round_driver='device' requires round_engine='batched' "
+                f"(got {self.fed.round_engine!r})")
+        if self.fed.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        has = [c.rescaler is not None for c in self.clients]
+        if any(has) and not all(has):
+            raise ValueError(
+                "round_driver='device' needs homogeneous rescaler presence "
+                "across the registry (the rescaler bank is one stacked "
+                "tree) — got a mix of with/without")
+
+    def _prep_device_rounds(self, start: int):
+        """Host-side prep for rounds ``[start, fed.rounds)``.
+
+        Draws every remaining round's participant set from the *same* RNG
+        stream the host loop would consume (`_sample_participants`), groups
+        each round's participants by cohort key, and fixes the static
+        cohort-key set of the scanned program: the union of keys over all
+        remaining rounds, each with capacity = the max member count it
+        reaches in any round.  Rounds where a key runs below capacity (or
+        not at all) fill the gap with ``client.empty_plan`` slots — every
+        step invalid (the local update is an exact no-op) and dataset size
+        0 (zero aggregation weight), so padded execution is equivalent to
+        the host loop's exact per-round cohorts.
+
+        Returns ``(keys, caps, xs, meta)``: ``xs[f"k{i}"]`` holds arrays
+        with a leading round axis (tokens/labels/mask/valid slot-stacked
+        plans, ``slot`` client-registry ids with ``n_clients`` marking
+        padding, ``size`` fp32 dataset sizes); ``meta[r]`` maps scan
+        outputs back to participant order.
+        """
+        rounds = list(range(start, self.fed.rounds))
+        per_round = []
+        for r in rounds:
+            parts = self._sample_participants()
+            part_clients = [self.clients[i] for i in parts]
+            order, members = group_by_key(part_clients, self.tc,
+                                          rank_of=self._dist_rank)
+            per_round.append((r, parts, order, members))
+
+        # static key set: first-appearance order across all rounds
+        keys: List[CohortKey] = []
+        for _, _, order, _ in per_round:
+            for key in order:
+                if key not in keys:
+                    keys.append(key)
+        caps = [max(len(members.get(key, []))
+                    for _, _, _, members in per_round) for key in keys]
+
+        # materialise every (round, key) plan list; track per-key max steps
+        plans: Dict[int, List[List[client_lib.BatchPlan]]] = {
+            i: [] for i in range(len(keys))}
+        steps = [1] * len(keys)
+        for r, parts, _, members in per_round:
+            seed = self.fed.seed * 1000 + r
+            for i, key in enumerate(keys):
+                ps = [client_lib.make_batch_plan(
+                          self.clients[parts[pos]], self.tc, seed)
+                      for pos in members.get(key, [])]
+                steps[i] = max([steps[i]] + [p.n_steps for p in ps])
+                plans[i].append(ps)
+
+        xs: Dict[str, Dict[str, np.ndarray]] = {}
+        meta = []
+        for ri, (r, parts, _, members) in enumerate(per_round):
+            meta.append({"round": r, "parts": parts,
+                         "members": {i: members.get(keys[i], [])
+                                     for i in range(len(keys))}})
+        n_clients = len(self.clients)
+        for i, key in enumerate(keys):
+            template = client_lib.pad_plan(
+                next(p for ps in plans[i] for p in ps), steps[i])
+            toks, labs, msks, vals, slots, sizes = [], [], [], [], [], []
+            for ri, (r, parts, _, members) in enumerate(per_round):
+                padded = [client_lib.pad_plan(p, steps[i])
+                          for p in plans[i][ri]]
+                mem = members.get(key, [])
+                pad_n = caps[i] - len(padded)
+                padded += [client_lib.empty_plan(template)] * pad_n
+                stacked = client_lib.stack_plans(padded)
+                toks.append(stacked.tokens)
+                labs.append(stacked.labels)
+                msks.append(stacked.mask)
+                vals.append(stacked.valid)
+                slots.append(np.asarray(
+                    [parts[pos] for pos in mem] + [n_clients] * pad_n,
+                    np.int32))
+                sizes.append(np.asarray(
+                    [float(self.clients[parts[pos]].dataset_size)
+                     for pos in mem] + [0.0] * pad_n, np.float32))
+            xs[f"k{i}"] = {"tokens": np.stack(toks),
+                           "labels": np.stack(labs),
+                           "mask": np.stack(msks),
+                           "valid": np.stack(vals),
+                           "slot": np.stack(slots),
+                           "size": np.stack(sizes)}
+        return keys, caps, xs, meta
+
+    def _device_segment_fn(self, keys: List[CohortKey], caps: List[int]):
+        """Build the jitted multi-round program: ``lax.scan`` over a
+        segment's rounds; the body runs every static cohort (unrolled —
+        cohort ``k`` is a jit static arg), streams each cohort into its own
+        accumulator, left-fold-merges the cohort accumulators (two-level
+        hierarchical combination; bitwise equal to the host loop's
+        sequential streaming because merging with a zero-initialised
+        accumulator is exact), finalizes against the carried global
+        adapter, and carries ``(global_lora, rescaler_bank)`` to the next
+        round."""
+        cfg, tc, fed = self.cfg, self.tc, self.fed
+        n_clients = len(self.clients)
+
+        def body(params, carry, x):
+            gl, bank = carry
+            accs, outs = [], {}
+            for i, key in enumerate(keys):
+                k, _rank, _bs, has_resc, mode = key
+                xk = x[f"k{i}"]
+                slot = xk["slot"]
+                stacked_tr = {"lora": jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (caps[i],) + l.shape),
+                    gl)}
+                if has_resc:
+                    # padding slots gather an arbitrary (clamped) bank row;
+                    # their update is a no-op and the scatter drops them
+                    stacked_tr["rescaler"] = jax.tree.map(
+                        lambda l: l[jnp.minimum(slot, n_clients - 1)], bank)
+                out_tr, counts, tok, loss_sum, n_valid = \
+                    client_lib.cohort_update(
+                        cfg, params, stacked_tr,
+                        xk["tokens"], xk["labels"], xk["mask"], xk["valid"],
+                        k=k, tc=tc,
+                        rescaler_trainable=(mode == "learnable"),
+                        backend=fed.cohort_backend)
+                if has_resc:
+                    bank = jax.tree.map(
+                        lambda bl, nl: bl.at[slot].set(nl, mode="drop"),
+                        bank, out_tr["rescaler"])
+                denom = jnp.maximum(tok, 1.0)[:, None, None]
+                freqs = {pos: c / denom for pos, c in counts.items()}
+                accs.append(agg.flame_acc_update(
+                    agg.flame_acc_init(gl), out_tr["lora"], freqs,
+                    xk["size"], fed.temperature))
+                outs[f"k{i}"] = {"loss_sum": loss_sum, "n_valid": n_valid,
+                                 "tok": tok, "counts": counts}
+            acc = accs[0]
+            for a in accs[1:]:
+                acc = agg.flame_acc_merge(acc, a)
+            gl = agg.flame_acc_finalize(acc, prev_lora=gl)
+            return (gl, bank), outs
+
+        @jax.jit
+        def seg(params, global_lora, bank, xs):
+            return jax.lax.scan(lambda c, x: body(params, c, x),
+                                (global_lora, bank), xs)
+
+        return seg
+
+    def _device_round_result(self, j: int, ys, meta_row) -> RoundResult:
+        """Rebuild one round's :class:`RoundResult` from scan outputs —
+        row ``j`` of the segment, mapped back to participant order."""
+        parts = meta_row["parts"]
+        losses: Dict[int, float] = {}
+        freqs: Dict[int, Dict[str, np.ndarray]] = {}
+        for i, mem in meta_row["members"].items():
+            yk = ys[f"k{i}"]
+            loss_sum = np.asarray(yk["loss_sum"][j])
+            n_valid = np.asarray(yk["n_valid"][j])
+            tok = np.asarray(yk["tok"][j])
+            counts = {pos: np.asarray(c[j]) for pos, c in yk["counts"].items()}
+            for s, pos in enumerate(mem):
+                losses[pos] = (float(loss_sum[s]) / float(n_valid[s])
+                               if n_valid[s] > 0 else float("nan"))
+                freqs[pos] = {p: c[s] / max(float(tok[s]), 1.0)
+                              for p, c in counts.items()}
+        return RoundResult(meta_row["round"],
+                           [losses[i] for i in range(len(parts))],
+                           [freqs[i] for i in range(len(parts))],
+                           parts)
+
+    def _run_rounds_device(self, start: int,
+                           checkpoint_to: Optional[str]) -> List[RoundResult]:
+        """Drive rounds ``[start, fed.rounds)`` as scanned device programs,
+        one segment per ``checkpoint_every`` rounds when checkpointing
+        (host sync points), else one program for the whole run."""
+        self._device_validate()
+        if start >= self.fed.rounds:
+            return []
+        keys, caps, xs, meta = self._prep_device_rounds(start)
+
+        if self.clients and self.clients[0].rescaler is not None:
+            bank = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                *[c.rescaler for c in self.clients])
+        else:
+            bank = {}
+        gl = jax.tree.map(jnp.asarray, self.global_lora)
+
+        n_rounds = self.fed.rounds - start
+        seg_len = (min(self.fed.checkpoint_every, n_rounds)
+                   if checkpoint_to else n_rounds)
+        seg_fns: Dict[int, Any] = {}          # one compile per segment length
+        tr = self._tracer
+        out: List[RoundResult] = []
+        for a in range(start, self.fed.rounds, seg_len):
+            b = min(a + seg_len, self.fed.rounds)
+            sl = slice(a - start, b - start)
+            xs_seg = {kk: {name: jnp.asarray(arr[sl])
+                           for name, arr in d.items()}
+                      for kk, d in xs.items()}
+            n_seg = b - a
+            if n_seg not in seg_fns:
+                seg_fns[n_seg] = self._device_segment_fn(keys, caps)
+            t0 = tr.now()
+            (gl, bank), ys = seg_fns[n_seg](self.params, gl, bank, xs_seg)
+            jax.block_until_ready(gl)
+            t1 = tr.now()
+
+            self.global_lora = gl
+            # persist bank rows back into client-local state so
+            # checkpoints (and later host-driver rounds) see trained s_i
+            if bank:
+                for i, c in enumerate(self.clients):
+                    c.rescaler = jax.tree.map(lambda l, i=i: l[i], bank)
+            ys_host = jax.tree.map(np.asarray, ys)
+            for j in range(n_seg):
+                res = self._device_round_result(j, ys_host, meta[a - start + j])
+                res.activation_drift = self._round_drift(res)
+                self.history.append(res)
+                out.append(res)
+                if tr.enabled:
+                    # segment wall-clock amortized evenly over its rounds —
+                    # the scan has no per-round host sync to time exactly
+                    rt0 = t0 + (t1 - t0) * j / n_seg
+                    rt1 = t0 + (t1 - t0) * (j + 1) / n_seg
+                    tr.complete(f"round {res.round_idx}", rt0, rt1,
+                                pid=PID_FEDERATED, cat="federated",
+                                args={"participants": len(res.participating),
+                                      "method": self.fed.method,
+                                      "driver": "device", "amortized": True})
+                self._emit_round_metrics(res)
+            if checkpoint_to:
+                self.save_checkpoint(checkpoint_to)
+        return out
 
     # ------------------------------------------------------------ checkpoints
     def save_checkpoint(self, path: str) -> None:
@@ -368,7 +648,9 @@ class FederatedServer:
         ``resume_from``: checkpoint path written by :meth:`save_checkpoint`
         (or by a previous ``run(checkpoint_to=...)``) — loads (global LoRA,
         rescalers, round idx) and continues from there;
-        ``checkpoint_to``: write a checkpoint after every completed round.
+        ``checkpoint_to``: write a checkpoint after every completed round
+        (host driver) or every ``fed.checkpoint_every`` rounds (device
+        driver — the segment boundaries are the host sync points).
 
         ``metrics_to``/``trace_to``: observability outputs — a registry
         snapshot (JSON) and a Chrome trace-event file of the round spans,
@@ -381,11 +663,14 @@ class FederatedServer:
         if trace_to and not self._tracer.enabled:
             self._set_tracer(Tracer())
         start = self.restore_checkpoint(resume_from) if resume_from else 0
-        out = []
-        for r in range(start, self.fed.rounds):
-            out.append(self.run_round(r))
-            if checkpoint_to:
-                self.save_checkpoint(checkpoint_to)
+        if self.fed.round_driver == "device":
+            out = self._run_rounds_device(start, checkpoint_to)
+        else:
+            out = []
+            for r in range(start, self.fed.rounds):
+                out.append(self.run_round(r))
+                if checkpoint_to:
+                    self.save_checkpoint(checkpoint_to)
         if metrics_to:
             self._metrics.dump(metrics_to)
         if trace_to:

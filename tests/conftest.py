@@ -12,6 +12,22 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jit_cache():
+    """Drop compiled executables at module boundaries.
+
+    The suite compiles hundreds of programs in one process; XLA:CPU keeps
+    every executable's JIT code alive for the process lifetime, and past
+    a few GB of accumulated code the LLVM JIT starts segfaulting inside
+    ``backend_compile`` on otherwise-fine programs.  Modules share almost
+    no jitted callables (engines/servers build their own closures), so
+    clearing per module costs little recompilation and keeps the live
+    footprint bounded no matter how many test files the repo grows.
+    """
+    yield
+    jax.clear_caches()
+
+
 def tiny_dense(**kw) -> ModelConfig:
     base = dict(
         name="tiny-dense", family="dense", num_layers=2, d_model=64,

@@ -128,3 +128,166 @@ def test_activation_frequency_clipped_unit_range():
     f = agg.activation_frequency({"pos0": jnp.asarray([[5.0, 0.0, 12.0]])},
                                  total_tokens=10.0)
     assert float(f["pos0"].max()) <= 1.0 and float(f["pos0"].min()) >= 0.0
+
+
+# ==========================================================================
+# streaming accumulator: init -> update(chunks) -> merge -> finalize must
+# equal the one-shot stacked flame_aggregate for ANY split of the client
+# set (hypothesis in CI, seeded sweep everywhere — never silently skipped)
+# ==========================================================================
+
+import pytest  # noqa: E402
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _population(seed, n):
+    """n clients with random loras, activation frequencies and sizes."""
+    rng = np.random.default_rng(seed)
+    loras = [_client_lora(seed * 100 + i) for i in range(n)]
+    freqs = [_freq(rng.uniform(0.0, 1.0, size=E)) for _ in range(n)]
+    sizes = rng.uniform(1.0, 50.0, size=n).tolist()
+    return loras, freqs, sizes
+
+
+def _stream(loras, freqs, sizes, chunks, prev, *, merge=False):
+    """Feed the population through flame_acc_* in ``chunks``-sized pieces,
+    either sequentially into one accumulator or via per-chunk accumulators
+    combined with flame_acc_merge (the device driver's two-level shape)."""
+    template = jax.tree.map(jnp.zeros_like, loras[0])
+    accs, lo = [], 0
+    for size in chunks:
+        hi = lo + size
+        acc = agg.flame_acc_update(
+            agg.flame_acc_init(template), loras[lo:hi], freqs[lo:hi],
+            sizes[lo:hi], temperature=2)
+        accs.append(acc)
+        lo = hi
+    if merge:
+        acc = accs[0]
+        for a in accs[1:]:
+            acc = agg.flame_acc_merge(acc, a)
+    else:
+        acc = agg.flame_acc_init(template)
+        for a in accs:
+            acc = agg.flame_acc_merge(acc, a)
+    return agg.flame_acc_finalize(acc, prev_lora=prev)
+
+
+def _assert_close(a, b, rtol=1e-5, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def _check_split_matches_stacked(seed: int, cuts, merge: bool) -> None:
+    loras, freqs, sizes = _population(seed, n=sum(cuts))
+    prev = _client_lora(seed + 7777)
+    want = agg.flame_aggregate(loras, freqs, sizes, temperature=2,
+                               prev_lora=prev)
+    got = _stream(loras, freqs, sizes, cuts, prev, merge=merge)
+    _assert_close(want, got)
+
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci_agg", max_examples=25, deadline=None,
+                              derandomize=True)
+    settings.load_profile("ci_agg")
+
+    @given(st.integers(0, 2 ** 16), st.lists(st.integers(1, 3), min_size=1,
+                                             max_size=4), st.booleans())
+    def test_streaming_matches_stacked_any_split(seed, cuts, merge):
+        _check_split_matches_stacked(seed, cuts, merge)
+
+
+def test_streaming_matches_stacked_seeded_sweep():
+    """Seeded fallback for the hypothesis property above — runs in every
+    environment, hypothesis installed or not."""
+    for seed, cuts, merge in [(0, [3], False), (1, [1, 1, 1], True),
+                              (2, [2, 3], False), (3, [1, 4], True),
+                              (4, [2, 1, 2, 1], True)]:
+        _check_split_matches_stacked(seed, cuts, merge)
+
+
+def test_streaming_permutation_invariant():
+    """Client order must not matter (beyond fp summation noise)."""
+    loras, freqs, sizes = _population(11, n=5)
+    prev = _client_lora(123)
+    base = _stream(loras, freqs, sizes, [2, 3], prev)
+    perm = np.random.default_rng(0).permutation(5)
+    shuffled = _stream([loras[i] for i in perm], [freqs[i] for i in perm],
+                       [sizes[i] for i in perm], [3, 2], prev)
+    _assert_close(base, shuffled, rtol=1e-4, atol=1e-5)
+
+
+def test_streaming_single_client_identity():
+    """One client with everywhere-positive activation: the aggregate IS
+    that client's adapter tree."""
+    lora = _client_lora(5)
+    freqs = [_freq([0.6] * E)]
+    out = _stream([lora], freqs, [13.0], [1], prev=_client_lora(6))
+    _assert_close(lora, out)
+
+
+def test_streaming_conserves_weight_mass():
+    """den_gamma / den_size accumulate exactly Σ γ_i and Σ |D_i| across
+    any chunking — the invariant that makes merge/finalize exact."""
+    loras, freqs, sizes = _population(21, n=4)
+    template = jax.tree.map(jnp.zeros_like, loras[0])
+    acc = agg.flame_acc_init(template)
+    for lo, hi in [(0, 1), (1, 3), (3, 4)]:
+        acc = agg.flame_acc_update(acc, loras[lo:hi], freqs[lo:hi],
+                                   sizes[lo:hi], temperature=2)
+    want_gamma = sum(np.asarray(f["pos0"], np.float64) ** 2 * s
+                     for f, s in zip(freqs, sizes))
+    np.testing.assert_allclose(np.asarray(acc["den_gamma"]["pos0"]),
+                               want_gamma, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(acc["den_size"]), sum(sizes),
+                               rtol=1e-6)
+
+
+# ==========================================================================
+# regression: an expert NOBODY activated in the whole round
+# ==========================================================================
+
+def test_round_wide_zero_activation_keeps_previous_expert():
+    """If every participant reports zero activation for an expert, its
+    weight mass is exactly zero: the stacked path used to EPS-divide the
+    zero numerator (silently resetting the expert's adapters to ~0), and
+    a naive streaming num/den would emit NaN.  Both paths must instead
+    keep the previous global adapter for that expert — and stay NaN-free
+    even without a previous tree."""
+    loras = [_client_lora(0), _client_lora(1)]
+    sizes = [10.0, 30.0]
+    # expert 1 never activated by anyone; others active
+    freqs = [_freq([0.5, 0.0, 0.4, 0.8]), _freq([0.7, 0.0, 0.2, 0.1])]
+    prev = _client_lora(42)
+
+    stacked = agg.flame_aggregate(loras, freqs, sizes, temperature=2,
+                                  prev_lora=prev)
+    streamed = _stream(loras, freqs, sizes, [1, 1], prev)
+    for out in (stacked, streamed):
+        pair = out["blocks"]["pos0"]["moe"]["experts"]["w1"]
+        prev_pair = prev["blocks"]["pos0"]["moe"]["experts"]["w1"]
+        for leaf in jax.tree.leaves(out):
+            assert not bool(np.isnan(np.asarray(leaf)).any())
+        for name in ("a", "b"):
+            np.testing.assert_allclose(
+                np.asarray(pair[name][:, 1]),
+                np.asarray(prev_pair[name][:, 1]), rtol=1e-6, atol=1e-7)
+            # active experts still aggregate normally (not prev)
+            assert not np.allclose(np.asarray(pair[name][:, 0]),
+                                   np.asarray(prev_pair[name][:, 0]))
+
+    # legacy behaviour (no prev tree): zero-filled, but never NaN
+    for out in (agg.flame_aggregate(loras, freqs, sizes, temperature=2),
+                _stream(loras, freqs, sizes, [2], prev=None)):
+        for leaf in jax.tree.leaves(out):
+            assert not bool(np.isnan(np.asarray(leaf)).any())
+        np.testing.assert_allclose(
+            np.asarray(out["blocks"]["pos0"]["moe"]["experts"]["w1"]
+                       ["a"][:, 1]), 0.0, atol=1e-6)

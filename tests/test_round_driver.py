@@ -1,0 +1,243 @@
+"""Device round driver vs the host-loop oracle (ISSUE 10 acceptance).
+
+``round_driver="device"`` folds multi-round federated training — per-round
+participant subsampling, budget-cohort regrouping, streaming FLAME
+aggregation, rescaler-bank scatter/gather — into one ``lax.scan`` program
+per checkpoint segment.  The host loop (``round_driver="host"``) survives
+as the reference oracle; this suite asserts the two produce the same
+rounds: identical participant sets (shared RNG stream), per-client losses
+and activation frequencies, the global adapter tree and every client's
+local rescaler within tight fp32 tolerance — across cohort backends,
+subsampling seeds and 1/2/4-cohort registry layouts, plus a 1024-client
+randomized trace in the ``-m slow`` CI subset and a bit-exact streamed
+checkpoint/resume roundtrip.
+"""
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_moe
+from repro.configs.base import FederatedConfig, TrainConfig
+from repro.data.synthetic import Corpus, DataConfig
+from repro.federated.cohort import group_by_key
+from repro.federated.simulation import build_experiment
+
+CFG = tiny_moe()
+TC = TrainConfig(batch_size=1, local_epochs=1)
+DATA = DataConfig(vocab_size=CFG.vocab_size, n_examples=96, seq_len=32,
+                  n_clusters=4)
+
+
+def _experiment(driver, *, clients=4, rounds=3, participation=0.75,
+                seed=0, backend="vmap", budget=None, tc=TC,
+                checkpoint_every=1, shard_sizes=None):
+    fed = FederatedConfig(num_clients=clients, rounds=rounds,
+                          participation=participation, method="flame",
+                          temperature=2, seed=seed, round_driver=driver,
+                          cohort_backend=backend,
+                          checkpoint_every=checkpoint_every)
+    exp = build_experiment(CFG, fed=fed, tc=tc, data=DATA, budget=budget)
+    if shard_sizes is not None:
+        # pin shard sizes so plan batch sizes (and with them the cohort
+        # count) are exactly what the test case wants
+        for c, n in zip(exp.server.clients, itertools.cycle(shard_sizes)):
+            s = c.shard
+            assert len(s.tokens) >= n, (c.client_id, len(s.tokens), n)
+            c.shard = Corpus(s.tokens[:n], s.labels[:n], s.mask[:n],
+                             s.clusters[:n])
+    return exp
+
+
+def _assert_trees_close(a, b, rtol=2e-5, atol=1e-6):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def _assert_same_rounds(host, device, rtol=2e-5, atol=1e-6):
+    """Full oracle differential between two completed servers."""
+    assert len(host.history) == len(device.history)
+    for rh, rd in zip(host.history, device.history):
+        assert rh.round_idx == rd.round_idx
+        assert rh.participating == rd.participating
+        np.testing.assert_allclose(rh.client_losses, rd.client_losses,
+                                   rtol=1e-5, atol=1e-6, equal_nan=True)
+        assert rd.activation_drift is not None
+        for fh, fd in zip(rh.client_freqs, rd.client_freqs):
+            assert set(fh) == set(fd)
+            for pos in fh:
+                np.testing.assert_allclose(fh[pos], fd[pos],
+                                           rtol=1e-5, atol=1e-6)
+    _assert_trees_close(host.global_lora, device.global_lora,
+                        rtol=rtol, atol=atol)
+    for ch, cd in zip(host.clients, device.clients):
+        assert (ch.rescaler is None) == (cd.rescaler is None)
+        if ch.rescaler is not None:
+            _assert_trees_close(ch.rescaler, cd.rescaler,
+                                rtol=rtol, atol=atol)
+
+
+# --------------------------------------------------------------------------
+# oracle differential: backends × seeds × cohort layouts
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,seed,budget,shard_sizes,n_cohorts", [
+    # one cohort: every client pinned to b1 (same k, same batch size)
+    ("vmap", 0, "b1", None, 1),
+    # two cohorts: round-robin β over tiny_moe's top_k=2 ⇒ k ∈ {2, 1}
+    ("vmap", 0, None, None, 2),
+    ("vmap", 3, None, None, 2),          # different subsampling stream
+    ("map", 0, None, None, 2),           # lax.map cohort backend
+])
+def test_device_driver_matches_host_oracle(backend, seed, budget,
+                                           shard_sizes, n_cohorts):
+    kw = dict(seed=seed, backend=backend, budget=budget,
+              shard_sizes=shard_sizes)
+    host = _experiment("host", **kw)
+    device = _experiment("device", **kw)
+    order, _ = group_by_key(device.server.clients, TC,
+                            rank_of=device.server._dist_rank)
+    assert len(order) == n_cohorts
+    host.server.run()
+    device.server.run()
+    _assert_same_rounds(host.server, device.server)
+
+
+def test_device_driver_matches_host_four_cohorts():
+    """Four shape-distinct cohorts: k ∈ {2, 1} crossed with pinned shard
+    sizes that force step batch sizes {3, 1, 2} — the full static-key-set
+    padding machinery (cohorts absent or short in a given round run
+    exact-no-op slots)."""
+    tc = dataclasses.replace(TC, batch_size=3)
+    #        k:   2  1  1  1   (β1..β4 round-robin over 8 clients)
+    sizes = [4, 4, 1, 2, 4, 4, 1, 2]
+    kw = dict(clients=8, participation=0.6, tc=tc, shard_sizes=sizes)
+    host = _experiment("host", **kw)
+    device = _experiment("device", **kw)
+    order, _ = group_by_key(device.server.clients, tc,
+                            rank_of=device.server._dist_rank)
+    assert len(order) == 4
+    host.server.run()
+    device.server.run()
+    _assert_same_rounds(host.server, device.server)
+
+
+def test_device_driver_multi_segment_checkpointing(tmp_path):
+    """checkpoint_every=2 over 3 rounds ⇒ a 2-round program then a 1-round
+    program, with a streamed checkpoint at each host sync point — still
+    equal to the host oracle, and the final checkpoint records round 3."""
+    from repro.checkpoint import io as ckpt_io
+    path = str(tmp_path / "seg.npz")
+    host = _experiment("host")
+    device = _experiment("device", checkpoint_every=2)
+    host.server.run()
+    device.server.run(checkpoint_to=path)
+    _assert_same_rounds(host.server, device.server)
+    _, meta = ckpt_io.load(path)
+    assert meta["round_idx"] == 3
+
+
+# --------------------------------------------------------------------------
+# streamed checkpoint -> resume: bit-exact continuation
+# --------------------------------------------------------------------------
+
+def test_device_resume_bit_matches_straight_run(tmp_path):
+    """A device run checkpointed at round 2 and resumed (replayed
+    subsampling RNG included) must reproduce rounds 2..3 of a straight
+    device run BIT-exactly: with full participation both runs compile the
+    same per-round program over the same operands, so there is no fp
+    slack to hide behind."""
+    path = str(tmp_path / "fed.npz")
+    kw = dict(rounds=4, participation=1.0)
+
+    straight = _experiment("device", **kw)
+    straight.server.run(checkpoint_to=str(tmp_path / "s.npz"))
+
+    first = _experiment("device", **kw)
+    first.server.fed = dataclasses.replace(first.server.fed, rounds=2)
+    first.server.run(checkpoint_to=path)
+
+    resumed = _experiment("device", **kw)
+    resumed.server.run(resume_from=path, checkpoint_to=path)
+    assert [r.round_idx for r in resumed.server.history] == [2, 3]
+    assert ([r.participating for r in resumed.server.history]
+            == [r.participating for r in straight.server.history[2:]])
+    for a, b in zip(jax.tree.leaves(straight.server.global_lora),
+                    jax.tree.leaves(resumed.server.global_lora)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ca, cb in zip(straight.server.clients, resumed.server.clients):
+        for a, b in zip(jax.tree.leaves(ca.rescaler),
+                        jax.tree.leaves(cb.rescaler)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ra, rb in zip(straight.server.history[2:], resumed.server.history):
+        np.testing.assert_array_equal(ra.client_losses, rb.client_losses)
+
+
+def test_cross_driver_resume(tmp_path):
+    """Checkpoints are driver-agnostic: a host-loop run checkpointed at
+    round 2 resumes under the device driver and lands where a straight
+    host run does (within fp tolerance)."""
+    path = str(tmp_path / "fed.npz")
+    kw = dict(rounds=4, participation=1.0)
+
+    straight = _experiment("host", **kw)
+    straight.server.run()
+
+    first = _experiment("host", **kw)
+    first.server.fed = dataclasses.replace(first.server.fed, rounds=2)
+    first.server.run(checkpoint_to=path)
+
+    resumed = _experiment("device", **kw)
+    resumed.server.run(resume_from=path)
+    assert ([r.participating for r in resumed.server.history]
+            == [r.participating for r in straight.server.history[2:]])
+    _assert_trees_close(straight.server.global_lora,
+                        resumed.server.global_lora)
+
+
+# --------------------------------------------------------------------------
+# validation
+# --------------------------------------------------------------------------
+
+def test_device_driver_rejects_unsupported_configs():
+    for kw, match in [
+        (dict(method="hlora"), "flame"),
+        (dict(round_engine="looped"), "batched"),
+        (dict(checkpoint_every=0), "checkpoint_every"),
+    ]:
+        fed = FederatedConfig(num_clients=2, rounds=1, round_driver="device",
+                              **kw)
+        exp = build_experiment(CFG, fed=fed, tc=TC, data=DATA)
+        with pytest.raises(ValueError, match=match):
+            exp.server.run()
+
+
+# --------------------------------------------------------------------------
+# thousand-client randomized trace (CI slow subset)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_device_driver_1024_clients_randomized_trace():
+    """1024 registered clients, 25% subsampling, two rounds: the scanned
+    program must still match the host oracle — participant sets, losses,
+    adapters — at a scale where the static key set, per-round padding
+    slots and the rescaler bank all do real work."""
+    data = DataConfig(vocab_size=CFG.vocab_size, n_examples=2048,
+                      seq_len=32, n_clusters=4, seed=11)
+    fed = FederatedConfig(num_clients=1024, rounds=2, participation=0.25,
+                          method="flame", temperature=2, seed=11,
+                          round_driver="host")
+    host = build_experiment(CFG, fed=fed, tc=TC, data=data)
+    device = build_experiment(
+        CFG, fed=dataclasses.replace(fed, round_driver="device"),
+        tc=TC, data=data)
+    host.server.run()
+    device.server.run()
+    assert all(len(r.participating) == 256 for r in device.server.history)
+    _assert_same_rounds(host.server, device.server, rtol=1e-4, atol=1e-5)
